@@ -1,0 +1,49 @@
+"""Paper Fig. 3 — MQTT latency vs (a) band × image size, (b) split ratio,
+(c) distance × velocity.
+
+Reproduces the qualitative structure from the Shannon–Hartley link model:
+5 GHz < 2.4 GHz latency, latency grows with image size, split ratio, and
+distance; and quantitatively anchors the distance curve on the paper's
+(4 m, ~1.25 s) / (26 m, ~13.9 s) measurements.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.mobility import MobilityModel, default_latency_curve, distance
+from repro.core.network import WIFI_2_4GHZ, WIFI_5GHZ, offload_latency
+
+
+def main(emit_fn=emit):
+    # (a) band × image size
+    sizes = np.array([0.2e6, 0.5e6, 1e6, 2e6])     # bytes/image
+    lat24 = [float(offload_latency(WIFI_2_4GHZ, s, 4.0)) for s in sizes]
+    lat5 = [float(offload_latency(WIFI_5GHZ, s, 4.0)) for s in sizes]
+    assert all(np.diff(lat24) > 0) and all(np.diff(lat5) > 0)
+    assert all(l5 < l24 for l5, l24 in zip(lat5, lat24))
+    ratio = float(np.mean(np.array(lat24) / np.array(lat5)))
+    emit_fn("fig3a.band_latency_ratio_2.4_over_5", 0.0, f"{ratio:.2f}")
+
+    # (b) split ratio (payload = r × 100 images × 80 KB)
+    rs = np.linspace(0.1, 1.0, 10)
+    lat_r = [float(offload_latency(WIFI_5GHZ, r * 100 * 80e3, 4.0)) for r in rs]
+    assert all(np.diff(lat_r) > 0)
+    emit_fn("fig3b.latency_monotone_in_r", 0.0, "True")
+
+    # (c) distance sweep from the fitted paper curve
+    curve, fit_us = timed(default_latency_curve)
+    l4 = float(curve(4.0))
+    l26 = float(curve(26.0))
+    emit_fn("fig3c.latency_at_4m_s", fit_us, f"{l4:.2f}")
+    emit_fn("fig3c.latency_at_26m_s", 0.0, f"{l26:.2f}")
+    assert 0.8 < l4 < 2.0 and 12.0 < l26 < 15.5   # paper: ~1.25 s / 13.9 s
+    # velocity enters through d = (Vp + Va)·t
+    mob_slow = MobilityModel(v_primary=0.5, v_auxiliary=0.5)
+    mob_fast = MobilityModel(v_primary=1.0, v_auxiliary=3.0)
+    assert float(distance(mob_fast, 5)) > float(distance(mob_slow, 5))
+    return {"l4": l4, "l26": l26, "band_ratio": ratio}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Fig. 6 + §VII-B Case-2 — dynamic (moving UGV) evaluation.
+
+Simulates the paper's setup: V_primary = 1 m/s, V_auxiliary = 3 m/s, split
+ratios {0.3, 0.7, 1.0}.  Reproduces: offload latency rises with distance;
+at ~26 m the latency reaches ~13.9 s; the β-threshold controller stops
+offloading beyond it and falls back to smaller r / local processing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.curvefit import fit_profiles
+from repro.core.mobility import MobilityModel, default_latency_curve, distance
+from repro.core.profiler import paper_profiles
+from repro.core.scheduler import SchedulerConfig, TaskScheduler
+from repro.core.solver import SolverConstraints
+
+
+def main(emit_fn=emit):
+    curve = default_latency_curve()
+    mob = MobilityModel(v_primary=1.0, v_auxiliary=3.0, beta=10.0)
+
+    # latency vs distance for the three split ratios (latency scales ~ r)
+    ds = np.arange(2.0, 30.0, 2.0)
+    base = np.array([float(curve(d)) for d in ds])
+    for r in (0.3, 0.7, 1.0):
+        lat = base * r
+        assert all(np.diff(lat) > 0)
+    i26 = int(np.argmin(np.abs(ds - 26.0)))
+    emit_fn("fig6.latency_at_26m_r1.0_s", 0.0, f"{base[i26]:.1f}")
+    assert 12.0 < base[i26] < 15.5                 # paper: 13.9 s
+
+    # β-threshold controller: sweep time, find when offloading stops
+    sch = TaskScheduler(
+        SchedulerConfig(beta=10.0, solver_constraints=SolverConstraints(
+            tau=68.34)), *paper_profiles(), mobility=mob)
+    stop_t = None
+    for t in np.arange(0.25, 12.0, 0.25):
+        dec = sch.decide(elapsed_s=float(t))
+        if not dec.offload:
+            stop_t = float(t)
+            break
+    assert stop_t is not None
+    stop_d = float(distance(mob, stop_t))
+    emit_fn("fig6.offload_stops_at_m", 0.0, f"{stop_d:.1f}")
+    # β=10 s crosses the fitted curve at ~21-24 m
+    assert 16.0 < stop_d < 27.0
+    emit_fn("fig6.beta_s", 0.0, "10.0")
+    return {"stop_distance_m": stop_d}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 7 — average power and memory across split ratios.
+
+Reproduces: (a) collaborative execution costs a small average-POWER premium
+(~4–5 % above the all-local baseline) while (b) cutting average MEMORY
+utilization dramatically (paper: 72.23 % baseline → ~47 % at r=0.7, a ~34 %
+relative reduction).  Derived from the Table I profiling data through our
+fitted M(r)/P(r) models.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.curvefit import fit_profiles
+from repro.core.profiler import PAPER_TABLE_I, paper_profiles
+
+BASELINE_MEM = 72.23     # % (paper §VII-C, split ratio = 0)
+
+
+def main(emit_fn=emit):
+    models = fit_profiles(*paper_profiles())
+
+    # power: the paper quotes a "4-5% average increase vs the all-local
+    # baseline", but its exact accounting isn't derivable from the
+    # published tables; we report both computable quantities —
+    # (a) total system power while collaborating (both devices active):
+    r07 = next(r for r in PAPER_TABLE_I if r[0] == 0.7)
+    p_total_07 = r07[2] + r07[6]                   # Xavier + Nano W
+    p_total_base = 5.89 + 0.95                     # Nano loaded + Xavier idle
+    emit_fn("fig7a.total_power_ratio", 0.0,
+            f"{p_total_07 / p_total_base:.2f}")
+    # (b) total ENERGY for the batch (power × time) — collaboration wins:
+    e_base = 5.89 * 68.34 + 0.95 * 68.34
+    e_07 = r07[2] * r07[1] + r07[6] * r07[4]
+    emit_fn("fig7a.energy_ratio_vs_baseline", 0.0, f"{e_07 / e_base:.2f}")
+    assert e_07 < e_base            # less total energy despite higher power
+
+    # memory: average utilization at r=0.7 vs the 72.23% baseline
+    m_avg_07 = (float(models.M1(0.7)) + float(models.M2(0.7))) / 2
+    emit_fn("fig7b.mem_avg_at_r0.7_pct", 0.0, f"{m_avg_07:.1f}")
+    reduction = 1.0 - m_avg_07 / BASELINE_MEM
+    emit_fn("fig7b.mem_reduction_vs_baseline", 0.0, f"{reduction:.2f}")
+    # paper: both devices average ~47% => ~34% relative reduction
+    assert 40.0 < m_avg_07 < 55.0
+    assert 0.25 < reduction < 0.45
+    return {"mem_avg": m_avg_07, "reduction": reduction}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Roofline analysis (deliverable g) — reads the dry-run JSON artifacts
+produced by ``python -m repro.launch.dryrun --all --layer-costs --out
+experiments/dryrun`` and derives, per (arch × shape × mesh):
+
+    compute term    = FLOPs_per_chip / 197 TFLOP/s
+    memory term     = HBM_bytes_per_chip / 819 GB/s
+    collective term = collective_bytes_per_chip / 50 GB/s
+
+with the scan-body correction: whole-program cost_analysis counts each
+lax.scan body ONCE (measured — see EXPERIMENTS.md), so the per-block costs
+in the artifact are added ×(trips−1).
+
+Also reports MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the
+useful-FLOPs ratio, and names the dominant term per row.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.configs.shapes import get_shape
+from repro.core.profiler import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..",
+                           "experiments", "dryrun")
+
+
+def corrected_costs(rec: dict) -> Dict[str, float]:
+    """Apply the scan-body trip-count correction to per-device costs."""
+    flops = rec["flops"]
+    bytes_ = rec["bytes_accessed"]
+    coll = rec["collective_bytes"]["total"]
+    lc = rec.get("layer_costs") or {}
+    for body in lc.get("bodies", []):
+        extra = body["trips"] - 1
+        if extra > 0:
+            flops += extra * body["flops"]
+            bytes_ += extra * body["bytes"]
+            coll += extra * body["coll"]
+    return {"flops": flops, "bytes": bytes_, "coll": coll}
+
+
+def load_records(directory: str = DEFAULT_DIR) -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyse_record(rec: dict) -> Optional[dict]:
+    if rec.get("skipped") or rec.get("error"):
+        return None
+    cfg = get_config(rec["arch"])
+    shape = get_shape(rec["shape"])
+    chips = 1
+    for v in rec["mesh"].values():
+        chips *= v
+    c = corrected_costs(rec)
+    t_comp = c["flops"] / PEAK_FLOPS_BF16
+    t_mem = c["bytes"] / HBM_BW
+    t_coll = c["coll"] / ICI_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+
+    mf = _model_flops(cfg, shape)
+    useful = mf / (c["flops"] * chips) if c["flops"] else float("nan")
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mode": rec["mode"],
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom, "model_flops": mf, "useful_ratio": useful,
+        "hbm_fit": (rec.get("temp_size_in_bytes") or 0) < 16 * 1024**3,
+        "temp_gib": (rec.get("temp_size_in_bytes") or 0) / 1024**3,
+    }
+
+
+def _model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference), refined for what the program
+    actually computes: prefill unembeds ONLY the last position (the
+    framework's prefill optimization), and the audio encoder runs over its
+    frame count, not the decoder token count."""
+    import repro.models.model as M
+    n = M.count_params_analytic(cfg, active_only=bool(cfg.num_experts))
+    B, S = shape.global_batch, shape.seq_len
+    vocab_p = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    enc_p = 0
+    if cfg.encoder_layers:
+        # encoder share of N (same layer shape as decoder minus cross-attn)
+        d, dh = cfg.d_model, cfg.head_dim
+        attn_p = d * cfg.num_heads * dh * 2 + d * cfg.num_kv_heads * dh * 2
+        mlp_p = (3 if cfg.mlp_type == "swiglu" else 2) * d * cfg.d_ff
+        enc_p = cfg.encoder_layers * (attn_p + mlp_p)
+    body = n - vocab_p - enc_p
+    if shape.mode == "train":
+        return 6.0 * n * B * S + 6.0 * enc_p * B * (cfg.frontend_tokens - S)
+    if shape.mode == "prefill":
+        return (2.0 * body * B * S              # layers over all positions
+                + 2.0 * vocab_p * B             # unembed: last position only
+                + 2.0 * enc_p * B * cfg.frontend_tokens)
+    # decode: every component runs for exactly B tokens (encoder cached)
+    return 2.0 * (body + vocab_p) * B
+
+
+def table(directory: str = DEFAULT_DIR) -> List[dict]:
+    rows = [r for r in (analyse_record(rec) for rec in load_records(directory))
+            if r is not None]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def main(emit_fn=emit, directory: str = DEFAULT_DIR):
+    rows = table(directory)
+    if not rows:
+        emit_fn("roofline.note", 0.0,
+                "no dry-run artifacts found — run "
+                "`python -m repro.launch.dryrun --all --layer-costs "
+                "--out experiments/dryrun` first")
+        return []
+    header = (f"{'arch':25s} {'shape':12s} {'mode':7s} "
+              f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+              f"{'dominant':>10s} {'useful':>7s} {'fits':>5s}")
+    print(header)
+    for r in rows:
+        print(f"{r['arch']:25s} {r['shape']:12s} {r['mode']:7s} "
+              f"{r['t_compute_s']:9.3e} {r['t_memory_s']:9.3e} "
+              f"{r['t_collective_s']:9.3e} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {str(r['hbm_fit']):>5s}")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    emit_fn("roofline.rows", 0.0, len(rows))
+    emit_fn("roofline.dominant_histogram", 0.0,
+            ";".join(f"{k}:{v}" for k, v in sorted(doms.items())))
+    fits = sum(1 for r in rows if r["hbm_fit"])
+    emit_fn("roofline.fits_hbm", 0.0, f"{fits}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §7).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table3     # substring filter
+
+Each module prints ``name,us_per_call,derived`` CSV rows and asserts its
+reproduction targets against the paper's published numbers.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig3_network, fig5_solver, fig6_mobility,
+                        fig7_power_memory, hetero_tpu, masking_savings,
+                        roofline, serving_bench, table1_profiling,
+                        table3_static, table4_multimodel)
+
+MODULES = [
+    ("table1", table1_profiling),
+    ("table3", table3_static),
+    ("table4", table4_multimodel),
+    ("fig3", fig3_network),
+    ("fig5", fig5_solver),
+    ("fig6", fig6_mobility),
+    ("fig7", fig7_power_memory),
+    ("masking", masking_savings),
+    ("serving", serving_bench),
+    ("roofline", roofline),
+    ("hetero_tpu", hetero_tpu),
+]
+
+
+def main() -> None:
+    filt = sys.argv[1] if len(sys.argv) > 1 else ""
+    failures = []
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        if filt and filt not in name:
+            continue
+        try:
+            mod.main()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}")
+        raise SystemExit(1)
+    print("benchmarks: all reproduction targets met")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""End-to-end training driver: train a ~100M-param llama-family model for a
+few hundred steps on the synthetic bigram corpus.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300] [--tiny]
+
+Demonstrates the full substrate: config system -> data pipeline -> AdamW ->
+checkpointing -> loss curve.  (--tiny uses the reduced config so the demo
+finishes in ~1 min on this CPU container.)
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import DataConfig, synthetic_lm_batches
+from repro.models import model as M
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CPU-friendly demo)")
+    ap.add_argument("--ckpt", default="/tmp/heteroedge_train.npz")
+    args = ap.parse_args()
+
+    base = get_config(args.arch)
+    if args.tiny:
+        cfg = reduced(base)
+        batch, seq = 8, 64
+    else:
+        # ~100M-param member of the same family
+        cfg = dataclasses.replace(
+            base, num_layers=8, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=32768, dtype="float32")
+        batch, seq = 8, 256
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"training {cfg.name} variant: {n / 1e6:.1f}M params, "
+          f"{args.steps} steps, batch {batch} × seq {seq}")
+
+    data = synthetic_lm_batches(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, batch_size=batch))
+    opt_cfg = OptimizerConfig(lr=1e-3, warmup_steps=20,
+                              total_steps=args.steps)
+
+    def log(i, metrics):
+        print(f"  step {i:4d}  loss={float(metrics['loss']):.4f}  "
+              f"lr={float(metrics['lr']):.2e}  "
+              f"gnorm={float(metrics['grad_norm']):.2f}")
+
+    params, opt_state, rep = train_loop(
+        cfg, params, data, opt_cfg, steps=args.steps, log_every=20,
+        callback=log)
+    print(f"loss: {rep.first_loss:.3f} -> {rep.final_loss:.3f} "
+          f"({rep.wall_s:.0f}s wall)")
+    assert rep.final_loss < rep.first_loss
+
+    save_checkpoint(args.ckpt, params, opt_state,
+                    metadata={"steps": args.steps, "arch": cfg.name})
+    _, _, meta = restore_checkpoint(args.ckpt, params, opt_state)
+    print(f"checkpoint saved+verified at {args.ckpt}  (meta={meta})")
+
+
+if __name__ == "__main__":
+    main()

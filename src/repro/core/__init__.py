@@ -1,0 +1,29 @@
+"""HeteroEdge core: the paper's contribution as a composable JAX library.
+
+Modules
+-------
+profiler   device/node-group capability profiles (paper §IV)
+curvefit   polynomial T/E/M-vs-r fits (Eqs. 1-3)
+solver     constrained split-ratio optimization (Eq. 4) + star topology
+network    Shannon–Hartley link models (§V-A.2)
+battery    battery/charging constraints (Eqs. 5-6)
+mobility   distance-latency model + β threshold (§V-A.5)
+scheduler  online decision loop (Algorithm 1)
+offload    split execution across node groups
+masking    frame/token-level compression (§VI)
+"""
+from repro.core.battery import BatteryState, available_power, offload_pressure
+from repro.core.curvefit import FittedModels, PolyFit, fit_profiles, polyfit
+from repro.core.mobility import MobilityModel, default_latency_curve
+from repro.core.network import (DCN_LINK, ICI_LINK, WIFI_2_4GHZ, WIFI_5GHZ,
+                                LinkModel, data_rate, offload_energy,
+                                offload_latency)
+from repro.core.offload import (NodeGroup, OffloadEngine, OffloadReport,
+                                padded_quota_batch, split_sizes)
+from repro.core.profiler import (DeviceProfile, JETSON_NANO, JETSON_XAVIER,
+                                 MeasuredProfile, WorkloadCost,
+                                 analytic_profile, paper_profiles)
+from repro.core.scheduler import (OffloadDecision, SchedulerConfig,
+                                  TaskScheduler)
+from repro.core.solver import (SolverConstraints, SolverResult, objective,
+                               solve_split_ratio, solve_star)

@@ -1,0 +1,47 @@
+"""Battery / charging constraints (paper §V-A.4, Eqs. 5-6).
+
+    E_available = C0·k − E_dnn − E_drive
+    P_available = E_available / ((1−k)(t_dnn + t_drive)/3600)
+
+When available power falls below a threshold the UGV offloads more
+aggressively.  The TPU analogue is a per-node-group *power budget*
+(DVFS cap / energy quota per serving window) — the control law is
+identical, so this module is used unchanged by both the reproduction
+benchmarks and the TPU scheduler.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class BatteryState:
+    capacity_wh: float = 14.8          # 4000 mAh @ 3.7 V  (RosBot/JetBot)
+    discharge_rate: float = 0.7        # k — usable fraction
+    drive_power_w: float = 17.5        # 15–20 W while driving
+    dnn_power_w: float = 5.5           # 5–6 W DNN draw
+
+
+def available_energy(batt: BatteryState, t_dnn_s, t_drive_s):
+    """Eq. 5 — E_available (Wh)."""
+    e_dnn = batt.dnn_power_w * jnp.asarray(t_dnn_s, jnp.float32) / 3600.0
+    e_drive = batt.drive_power_w * jnp.asarray(t_drive_s, jnp.float32) / 3600.0
+    return batt.capacity_wh * batt.discharge_rate - e_dnn - e_drive
+
+
+def available_power(batt: BatteryState, t_dnn_s, t_drive_s):
+    """Eq. 6 — P_available (W)."""
+    e_av = available_energy(batt, t_dnn_s, t_drive_s)
+    hours = (1.0 - batt.discharge_rate) * (t_dnn_s + t_drive_s) / 3600.0
+    return e_av / jnp.maximum(hours, 1e-9)
+
+
+def offload_pressure(batt: BatteryState, t_dnn_s, t_drive_s,
+                     power_threshold_w: float):
+    """∈[0,1]: how aggressively to push work to the auxiliary node.
+    0 when P_available comfortably exceeds the threshold; →1 as the
+    budget collapses (paper: 'starts offloading more aggressively')."""
+    p = available_power(batt, t_dnn_s, t_drive_s)
+    return jnp.clip(1.0 - p / jnp.maximum(power_threshold_w, 1e-9), 0.0, 1.0)

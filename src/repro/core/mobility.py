@@ -1,0 +1,44 @@
+"""Mobility constraints (paper §V-A.5, §VII-B Case-2).
+
+Distance model:      d(t) = (V_primary + V_auxiliary) · t
+Fitted latency:      L(d) = a1·d² − a2·d + a3
+Threshold control:   if L ≥ β → stop offloading (re-solve with smaller r,
+                     fall back to local execution if no feasible r).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.curvefit import PolyFit, polyfit
+
+
+@dataclass(frozen=True)
+class MobilityModel:
+    v_primary: float = 1.0       # m/s (paper Case-2)
+    v_auxiliary: float = 3.0     # m/s
+    beta: float = 10.0           # latency threshold β (s)
+
+
+def distance(mob: MobilityModel, t_s):
+    return (mob.v_primary + mob.v_auxiliary) * jnp.asarray(t_s, jnp.float32)
+
+
+# Fitted on the paper's Fig-6-style measurements: latency rises superlinearly
+# with distance; anchored at (4 m, ~1.25 s) and (26 m, ~13.9 s).
+def default_latency_curve() -> PolyFit:
+    d = np.array([2.0, 4.0, 6.0, 10.0, 14.0, 18.0, 22.0, 26.0])
+    lat = np.array([0.9, 1.25, 1.9, 3.4, 5.5, 8.0, 10.8, 13.9])
+    return polyfit(d, lat, 2)
+
+
+def latency_at(curve: PolyFit, mob: MobilityModel, t_s):
+    return curve(distance(mob, t_s))
+
+
+def should_offload(curve: PolyFit, mob: MobilityModel, t_s):
+    """paper: If L ≥ β, stop sending data."""
+    return latency_at(curve, mob, t_s) < mob.beta

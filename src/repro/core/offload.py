@@ -1,0 +1,157 @@
+"""Offload execution engine (paper §III "task scheduler" actuation).
+
+The paper's runtime is two devices + MQTT: the primary keeps (1−r)·B of the
+batch, ships r·B to the auxiliary, both execute, results merge.  Here a
+*node group* is a set of JAX devices (a mesh sub-slice; on the production
+mesh: pod 0 = primary, pod 1 = auxiliary).  Two execution modes:
+
+* ``run`` — dispatch-level split, faithful to the paper: one jitted program
+  per group over its own sub-mesh, asymmetric static batch split, simulated
+  link latency from the LinkModel (wall-clock measured on this host).
+* ``padded_step`` — single-XLA-program variant used by the multi-pod
+  dry-run: batch laid out [n_groups, quota_max, ...] over the "pod" axis
+  with per-group validity masks; proves the whole collaborative step
+  lowers as one program (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import LinkModel, offload_energy, offload_latency
+from repro.core.profiler import DeviceProfile
+
+
+@dataclass
+class NodeGroup:
+    name: str
+    devices: List[Any]
+    profile: DeviceProfile
+
+    def mesh(self, axes=("data",)):
+        import numpy as _np
+        devs = _np.array(self.devices)
+        if len(axes) == 1:
+            return jax.sharding.Mesh(devs, axes)
+        return jax.sharding.Mesh(devs.reshape(-1, len(self.devices) // 1), axes)
+
+
+@dataclass
+class OffloadReport:
+    r: float
+    n_local: int
+    n_offloaded: int
+    t_local_s: float
+    t_remote_s: float
+    t_offload_s: float          # link latency (model-predicted)
+    payload_bytes: float
+    e_offload_j: float
+    outputs: Any = None
+
+    @property
+    def t_parallel(self) -> float:
+        """Completion time with local/remote overlap."""
+        return max(self.t_local_s, self.t_offload_s + self.t_remote_s)
+
+    @property
+    def t_serial(self) -> float:
+        """Paper-objective-style serial accounting: r(T1+T3) + (1-r)T2."""
+        return self.t_local_s + self.t_remote_s + self.t_offload_s
+
+
+def split_sizes(batch: int, r: float) -> Tuple[int, int]:
+    """(n_offloaded, n_local); n_offloaded = round(r·B) like the paper's
+    70 / 30 image split."""
+    n_off = int(round(r * batch))
+    return n_off, batch - n_off
+
+
+class OffloadEngine:
+    """Executes one workload batch split across a primary and an auxiliary
+    node group."""
+
+    def __init__(self, task_fn: Callable[[Any], Any],
+                 primary: NodeGroup, auxiliary: NodeGroup,
+                 link: LinkModel, *, payload_bytes_per_item: float,
+                 distance_fn: Callable[[], float] = lambda: 1.0,
+                 jit: bool = True):
+        self.task_fn = task_fn
+        self.primary, self.auxiliary = primary, auxiliary
+        self.link = link
+        self.payload_bytes_per_item = payload_bytes_per_item
+        self.distance_fn = distance_fn
+        self.jit = jit  # False for host-loop tasks (e.g. a generate() loop)
+        self._compiled: Dict[Tuple[str, int], Any] = {}
+
+    # ------------------------------------------------------------------
+    def _get_fn(self, group: NodeGroup, n: int):
+        if not self.jit:
+            return self.task_fn
+        key = (group.name, n)
+        if key not in self._compiled:
+            dev = group.devices[0]
+            self._compiled[key] = jax.jit(self.task_fn, device=dev)
+        return self._compiled[key]
+
+    @staticmethod
+    def _slice_batch(batch, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], batch)
+
+    def run(self, batch, r: float) -> OffloadReport:
+        B = jax.tree.leaves(batch)[0].shape[0]
+        n_off, n_loc = split_sizes(B, r)
+        d = float(self.distance_fn())
+        payload = n_off * self.payload_bytes_per_item
+        t_off = float(offload_latency(self.link, payload, d)) if n_off else 0.0
+        e_off = float(offload_energy(self.link, payload, d)) if n_off else 0.0
+
+        outputs = []
+        t_loc = t_rem = 0.0
+        if n_loc:
+            fn = self._get_fn(self.primary, n_loc)
+            sl = self._slice_batch(batch, n_off, B)
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(sl))
+            t_loc = time.perf_counter() - t0
+            outputs.append(out)
+        if n_off:
+            fn = self._get_fn(self.auxiliary, n_off)
+            sl = self._slice_batch(batch, 0, n_off)
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(sl))
+            t_rem = time.perf_counter() - t0
+            outputs.insert(0, out)
+        merged = None
+        if outputs:
+            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outputs) \
+                if len(outputs) > 1 else outputs[0]
+        return OffloadReport(r=r, n_local=n_loc, n_offloaded=n_off,
+                             t_local_s=t_loc, t_remote_s=t_rem,
+                             t_offload_s=t_off, payload_bytes=payload,
+                             e_offload_j=e_off, outputs=merged)
+
+
+# ---------------------------------------------------------------------------
+def padded_quota_batch(batch, r: float, n_groups: int = 2):
+    """Re-lay a batch as [n_groups, quota_max, ...] + validity mask for the
+    single-program multi-pod step.  Group 0 = auxiliary (gets round(r·B)),
+    group 1 = primary."""
+    B = jax.tree.leaves(batch)[0].shape[0]
+    n_off, n_loc = split_sizes(B, r)
+    quota = max(n_off, n_loc, 1)
+
+    def relay(a):
+        pad = jnp.zeros((n_groups * quota - B, *a.shape[1:]), a.dtype)
+        aux = a[:n_off]
+        loc = a[n_off:]
+        aux = jnp.concatenate([aux, pad[:quota - n_off]], 0)
+        loc = jnp.concatenate([loc, pad[:quota - n_loc]], 0)
+        return jnp.stack([aux, loc])
+
+    mask = jnp.stack([jnp.arange(quota) < n_off, jnp.arange(quota) < n_loc])
+    return jax.tree.map(relay, batch), mask

@@ -1,0 +1,127 @@
+"""HeteroEdge online task scheduler (paper §III, Algorithm 1).
+
+Ties the pieces together per decision epoch:
+
+  1. gather profiles (measured EMA or analytic-from-roofline)
+  2. curve-fit T/E/M vs r                      (curvefit)
+  3. gate: mobility latency L < β?             (mobility)
+  4. gate: memory availability λ?              (Algorithm 1, line 3)
+  5. battery pressure → r floor                (battery)
+  6. solve Eq. 4 for r*                        (solver)
+  7. emit OffloadDecision (consumed by offload.OffloadEngine)
+
+The scheduler is deliberately stateful-but-small: profiles are EMA-updated
+from observed execution, matching the paper's "continuously monitor system
+variables" loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import battery as batt_mod
+from repro.core import mobility as mob_mod
+from repro.core.curvefit import FittedModels, fit_profiles
+from repro.core.profiler import MeasuredProfile
+from repro.core.solver import (SolverConstraints, SolverResult, objective,
+                               solve_split_ratio)
+
+
+@dataclass
+class OffloadDecision:
+    offload: bool
+    split_ratio: float
+    predicted_time: float
+    reason: str
+    solver: Optional[SolverResult] = None
+
+
+@dataclass
+class SchedulerConfig:
+    beta: float = 10.0                  # mobility latency threshold (s)
+    lambda_mem: float = 0.95            # availability factor gate (Alg. 1 line 3)
+    power_threshold_w: float = 8.0      # battery pressure threshold
+    ema: float = 0.3                    # profile update smoothing
+    solver_constraints: SolverConstraints = field(
+        default_factory=lambda: SolverConstraints(tau=1.0))
+
+
+class TaskScheduler:
+    def __init__(self, cfg: SchedulerConfig,
+                 aux_prof: MeasuredProfile, pri_prof: MeasuredProfile,
+                 off_prof: MeasuredProfile,
+                 battery: Optional[batt_mod.BatteryState] = None,
+                 mobility: Optional[mob_mod.MobilityModel] = None):
+        self.cfg = cfg
+        self.aux_prof, self.pri_prof, self.off_prof = aux_prof, pri_prof, off_prof
+        self.battery = battery
+        self.mobility = mobility
+        self.latency_curve = mob_mod.default_latency_curve()
+        self.models: Optional[FittedModels] = None
+        self.history = []
+
+    # ------------------------------------------------------------------
+    def refit(self) -> FittedModels:
+        self.models = fit_profiles(self.aux_prof, self.pri_prof, self.off_prof)
+        return self.models
+
+    def observe(self, r: float, t_aux: float, t_pri: float, t_off: float,
+                p_aux: float = 0.0, p_pri: float = 0.0,
+                m_aux: float = 0.0, m_pri: float = 0.0):
+        """EMA-update the nearest profile sample (paper: continuous logging)."""
+        a = self.cfg.ema
+        for prof, (t, p, m) in ((self.aux_prof, (t_aux, p_aux, m_aux)),
+                                (self.pri_prof, (t_pri, p_pri, m_pri)),
+                                (self.off_prof, (t_off, 0.0, 0.0))):
+            best = min(prof.samples, key=lambda s: abs(s.r - r))
+            if abs(best.r - r) > 0.05:
+                prof.add(r, t, p, m)
+            else:
+                best.T = (1 - a) * best.T + a * t
+                best.P = (1 - a) * best.P + a * p
+                best.M = (1 - a) * best.M + a * m
+        self.models = None  # force refit
+
+    # ------------------------------------------------------------------
+    def decide(self, *, elapsed_s: float = 0.0, t_dnn_s: float = 60.0,
+               t_drive_s: float = 0.0) -> OffloadDecision:
+        models = self.models or self.refit()
+        cons = self.cfg.solver_constraints
+
+        # mobility gate (Alg. 1 line 3: check latency L <= β)
+        if self.mobility is not None:
+            L = float(mob_mod.latency_at(self.latency_curve, self.mobility,
+                                         elapsed_s))
+            if L >= self.cfg.beta:
+                dec = OffloadDecision(False, 0.0,
+                                      float(objective(models, 0.0)),
+                                      f"mobility: L={L:.2f}s >= beta={self.cfg.beta}s")
+                self.history.append(dec)
+                return dec
+            cons = dataclasses.replace(cons, beta=self.cfg.beta)
+
+        # memory availability gate (Alg. 1 line 3: M1, M2 >= λ)
+        m_used_aux = models.M1(1.0)
+        if float(m_used_aux) > 100.0 * self.cfg.lambda_mem:
+            cons = dataclasses.replace(
+                cons, m_max=(100.0 * self.cfg.lambda_mem, cons.m_max[1]))
+
+        # battery pressure → offload floor (paper §V-A.4)
+        if self.battery is not None:
+            pressure = float(batt_mod.offload_pressure(
+                self.battery, t_dnn_s, t_drive_s, self.cfg.power_threshold_w))
+            cons = dataclasses.replace(cons, r_min=max(cons.r_min, 0.9 * pressure))
+
+        res = solve_split_ratio(models, cons)
+        if not res.feasible:
+            # paper §VII-B: search failed within bounds -> process locally
+            dec = OffloadDecision(False, 0.0, res.t_baseline,
+                                  "infeasible: falling back to local", res)
+        else:
+            dec = OffloadDecision(res.r_opt > 1e-3, res.r_opt, res.t_opt,
+                                  "solved", res)
+        self.history.append(dec)
+        return dec

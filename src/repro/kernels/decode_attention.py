@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: GQA decode attention (1 token vs a long KV cache).
+
+The decode hot-spot is memory-bound: every step streams the whole (or the
+windowed part of the) KV cache from HBM once.  The kernel tiles the cache
+into [Sb, dh] VMEM blocks, runs an online-softmax accumulation per
+(batch, kv-head) grid cell, and keeps the [G, dh] accumulator in VMEM
+scratch (G = query heads per kv head).  The MXU sees [G,dh]x[dh,Sb] and
+[G,Sb]x[Sb,dh] GEMMs — hardware-aligned when dh, Sb are multiples of 128.
+
+cache_len arrives as a [B] int32 array (per-sequence valid length);
+`window > 0` adds the sliding-window mask (mixtral / zamba long-context).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, s_block: int, n_s: int, window: int, scale: float):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0]
+    q = q_ref[...].astype(jnp.float32)                    # [G, dh]
+    k = k_ref[...].astype(jnp.float32)                    # [Sb, dh]
+    v = v_ref[...].astype(jnp.float32)                    # [Sb, dh]
+
+    sc = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, Sb]
+    pos = s * s_block + jax.lax.broadcasted_iota(jnp.int32, (1, s_block), 1)
+    valid = pos < cache_len
+    if window:
+        valid &= pos >= (cache_len - window)
+    sc = jnp.where(valid, sc, -jnp.inf)
+
+    m_prev = m_scr[...]                                   # [G, 1]
+    m_new = jnp.maximum(m_prev, sc.max(axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.where(jnp.isfinite(sc), jnp.exp(sc - m_safe), 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
+                      ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, cache_len, *,
+                            window: int = 0, s_block: int = 512,
+                            interpret: bool = True):
+    """q: [B,1,H,dh]; caches: [B,S,Hkv,dh]; cache_len: [B] or scalar.
+    Returns [B,1,H,dh] (v dtype).  Matches ref.decode_attention_ref."""
+    B, _, H, dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    s_block = min(s_block, S)
+    assert S % s_block == 0
+    n_s = S // s_block
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,)).reshape(B, 1)
+    qh = q.reshape(B, Hkv, G, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, s_block=s_block, n_s=n_s, window=window,
+                          scale=1.0 / np.sqrt(dh)),
+        grid=(B, Hkv, n_s),
+        in_specs=[
+            pl.BlockSpec((None, 1), lambda b, h, s: (b, 0)),
+            pl.BlockSpec((None, None, G, dh), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((None, s_block, None, dh), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((None, s_block, None, dh), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, dh), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), v_cache.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cl, qh, k_cache, v_cache)
+    return out.reshape(B, 1, H, dh)

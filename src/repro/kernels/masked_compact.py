@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: masked token compaction (paper §VI frame masking).
+
+GPU intuition would be a warp-level stream compaction (ballot + prefix sum
++ scatter).  TPUs have no warp shuffles — the TPU-native formulation
+(DESIGN.md §6) turns the scatter into a ONE-HOT MATMUL that the MXU eats:
+
+    positions p = running_count + cumsum(mask) − mask        (per S-block)
+    P[i, p_i] = mask_i                                       ([Sb, K] one-hot)
+    out[K, Dt] += Pᵀ @ tokens[Sb, Dt]                        (MXU GEMM)
+
+Grid = (B, nD, nS) with the S axis innermost; a scalar SMEM cell carries the
+running count across S-blocks (TPU grid execution is sequential over the
+trailing axis, so the carry is well-defined).  Output/idx blocks revisit
+across s and accumulate; they are zero/-1-initialized at s == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(mask_ref, tok_ref, out_ref, idx_ref, cnt_ref, count_smem,
+            *, capacity: int, s_block: int, n_s: int):
+    s = pl.program_id(2)
+    d = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        count_smem[0] = 0
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when((s == 0) & (d == 0))
+    def _init_idx():
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    base = count_smem[0]
+    m = mask_ref[...].astype(jnp.int32)                    # [Sb]
+    local = jnp.cumsum(m) - m                              # 0-based slot offset
+    pos = base + local                                     # [Sb] global slot
+    keep = (m > 0) & (pos < capacity)
+
+    onehot = (pos[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, capacity), 1)) \
+        & keep[:, None]                                    # [Sb, K]
+    oh = onehot.astype(jnp.float32)
+
+    tok = tok_ref[...].astype(jnp.float32)                 # [Sb, Dt]
+    out_ref[...] += jnp.dot(oh.T, tok,
+                            preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+    @pl.when(d == 0)
+    def _indices():
+        gidx = s * s_block + jax.lax.broadcasted_iota(jnp.int32, (s_block,), 0)
+        # empty slots stay -1: accumulate (idx+1) so  -1 + (i+1) = i
+        idx_ref[...] += jnp.dot(oh.T, (gidx + 1).astype(jnp.float32)[:, None],
+                                preferred_element_type=jnp.float32
+                                ).astype(jnp.int32)[:, 0]
+
+    new_count = base + jnp.sum(m)
+    count_smem[0] = new_count
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        cnt_ref[...] = jnp.minimum(new_count, capacity)
+
+
+def masked_compact_pallas(tokens, mask, capacity: int, *,
+                          s_block: int = 128, d_block: int = 128,
+                          interpret: bool = True):
+    """tokens: [B,S,D]; mask: [B,S] bool.  Matches ref.masked_compact_ref."""
+    B, S, D = tokens.shape
+    s_block = min(s_block, S)
+    d_block = min(d_block, D)
+    assert S % s_block == 0 and D % d_block == 0, (S, s_block, D, d_block)
+    n_s, n_d = S // s_block, D // d_block
+    grid = (B, n_d, n_s)
+
+    out, idx, cnt = pl.pallas_call(
+        functools.partial(_kernel, capacity=capacity, s_block=s_block, n_s=n_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, s_block), lambda b, d, s: (b, s)),
+            pl.BlockSpec((None, s_block, d_block), lambda b, d, s: (b, s, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, capacity, d_block), lambda b, d, s: (b, 0, d)),
+            pl.BlockSpec((None, capacity), lambda b, d, s: (b, 0)),
+            pl.BlockSpec((None,), lambda b, d, s: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capacity, D), tokens.dtype),
+            jax.ShapeDtypeStruct((B, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(mask, tokens)
+    return out, idx, cnt

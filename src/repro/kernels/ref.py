@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each ``*_ref`` matches the corresponding ``pallas_call`` in semantics and
+output dtypes; tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# masked_compact: the frame-masking compression hot-spot (paper §VI)
+# ---------------------------------------------------------------------------
+def masked_compact_ref(tokens, mask, capacity: int):
+    """tokens: [B,S,D]; mask: [B,S] bool -> (out [B,K,D], idx [B,K] int32,
+    count [B] int32).  Kept tokens are packed in order; overflow beyond
+    `capacity` is dropped; empty slots are zero (idx = -1)."""
+    B, S, D = tokens.shape
+    K = capacity
+    m = mask.astype(jnp.int32)
+    pos = jnp.cumsum(m, axis=1) - m                       # slot per kept token
+    tgt = jnp.where(mask, pos, K)                         # K => dropped
+    b_idx = jnp.arange(B)[:, None]
+    out = jnp.zeros((B, K, D), tokens.dtype).at[b_idx, tgt].add(
+        jnp.where(mask[..., None], tokens, 0), mode="drop")
+    idx = jnp.full((B, K), -1, jnp.int32).at[b_idx, tgt].set(
+        jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S)), mode="drop")
+    count = jnp.minimum(m.sum(axis=1), K).astype(jnp.int32)
+    return out, idx, count
+
+
+def masked_scatter_ref(compacted, idx, seq_len: int):
+    """Inverse of masked_compact: re-expand [B,K,D] + idx -> [B,S,D]."""
+    B, K, D = compacted.shape
+    valid = idx >= 0
+    tgt = jnp.where(valid, idx, seq_len)
+    b_idx = jnp.arange(B)[:, None]
+    return jnp.zeros((B, seq_len, D), compacted.dtype).at[b_idx, tgt].add(
+        jnp.where(valid[..., None], compacted, 0), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: GQA single-token attention over a KV cache
+# ---------------------------------------------------------------------------
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """q: [B,1,H,dh]; caches: [B,S,Hkv,dh]; cache_len: [B] or scalar int32
+    number of valid positions.  Returns [B,1,H,dh] in v dtype."""
+    B, _, H, dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / np.sqrt(dh)
+    cl = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    qf = q.reshape(B, Hkv, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None]                             # [1,S]
+    valid = pos < cl[:, None]
+    if window:
+        valid &= pos >= (cl[:, None] - window)
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, dh).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped_ffn: per-expert SwiGLU FFN over the MoE capacity buffer
+# ---------------------------------------------------------------------------
+def grouped_ffn_ref(buf, wg, wu, wd):
+    """buf: [E,C,D]; wg/wu: [E,D,F]; wd: [E,F,D] -> [E,C,D] (buf dtype)."""
+    g = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                   wg.astype(jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", buf.astype(jnp.float32),
+                   wu.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h,
+                      wd.astype(jnp.float32)).astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan: Mamba-1 selective-scan chunk (diag A)
+# ---------------------------------------------------------------------------
+def ssm_scan_ref(decay, bx, h0):
+    """decay/bx: [B,S,di,N] f32; h0: [B,di,N].  Sequential oracle.
+    Returns (h_all [B,S,di,N], h_last)."""
+    def step(h, inp):
+        d, b = inp
+        h = d * h + b
+        return h, h
+    h_last, h_all = jax.lax.scan(
+        step, h0, (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(bx, 1, 0)))
+    return jnp.moveaxis(h_all, 0, 1), h_last

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: Mamba-1 selective scan (chunked, diag-A).
+
+The recurrence h_t = decay_t ⊙ h_{t-1} + bx_t is sequential in t, but
+within an S-block it is a first-order linear recurrence that admits an
+associative scan (Blelloch) — log₂(Sb) vector stages in VMEM instead of Sb
+sequential HBM round-trips.  The cross-block carry h lives in VMEM scratch;
+the grid's trailing axis walks S-blocks sequentially (TPU guarantee), so
+the carry is well-defined, mirroring masked_compact's running counter.
+
+GPU Mamba fuses this with the projections into one kernel using shared
+memory + warp shuffles; the TPU adaptation keeps the projections as XLA
+einsums (MXU-optimal already) and owns only the scan, the part XLA lowers
+poorly (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(decay_ref, bx_ref, h0_ref, hall_ref, hlast_ref, h_scr,
+            *, n_s: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)      # [dt, N]
+
+    d = decay_ref[...].astype(jnp.float32)                # [Sb, dt, N]
+    b = bx_ref[...].astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = jax.lax.associative_scan(combine, (d, b), axis=0)
+    h_rows = A * h_scr[...][None] + Bc                    # [Sb, dt, N]
+    hall_ref[...] = h_rows.astype(hall_ref.dtype)
+    h_scr[...] = h_rows[-1]
+
+    @pl.when(s == n_s - 1)
+    def _finalize():
+        hlast_ref[...] = h_rows[-1].astype(hlast_ref.dtype)
+
+
+def ssm_scan_pallas(decay, bx, h0, *, s_block: int = 128, d_block: int = 256,
+                    interpret: bool = True):
+    """decay/bx: [B,S,di,N] f32; h0: [B,di,N].  Matches ref.ssm_scan_ref."""
+    B, S, di, N = decay.shape
+    s_block = min(s_block, S)
+    d_block = min(d_block, di)
+    assert S % s_block == 0 and di % d_block == 0
+    n_s, n_d = S // s_block, di // d_block
+
+    h_all, h_last = pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s),
+        grid=(B, n_d, n_s),
+        in_specs=[
+            pl.BlockSpec((None, s_block, d_block, N), lambda b, d, s: (b, s, d, 0)),
+            pl.BlockSpec((None, s_block, d_block, N), lambda b, d, s: (b, s, d, 0)),
+            pl.BlockSpec((None, d_block, N), lambda b, d, s: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, s_block, d_block, N), lambda b, d, s: (b, s, d, 0)),
+            pl.BlockSpec((None, d_block, N), lambda b, d, s: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_block, N), jnp.float32)],
+        interpret=interpret,
+    )(decay, bx, h0)
+    return h_all, h_last

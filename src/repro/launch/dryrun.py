@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, with NO real allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+The two lines above MUST stay the first statements of this module: jax
+locks the device count at first init, and the 512 placeholder host devices
+exist only for the dry-run (tests/benches see 1 device).
+
+Per combination this produces: memory_analysis (proves it fits),
+cost_analysis (FLOPs / bytes for §Roofline), and the collective-bytes
+breakdown parsed from the compiled HLO (for the collective roofline term).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, get_config, list_configs
+from repro.configs.shapes import INPUT_SHAPES, InputShape, applicable, get_shape
+from repro.launch.mesh import (batch_axes, data_shardings,
+                               make_production_mesh, params_shardings,
+                               replicated)
+from repro.models import model as M
+from repro.models.sharding import activation_sharding
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train import make_train_step
+
+BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+         "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+         "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        op = None
+        for c in _COLLECTIVES:
+            # match op invocation like " all-reduce(" or " all-gather-start("
+            if re.search(rf"\s{c}(-start)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        lhs_shapes = _SHAPE_RE.findall(stripped.split("=", 1)[0] + "=" +
+                                       rhs.split("(", 1)[0])
+        total = 0
+        for dt, dims in lhs_shapes:
+            if dt not in BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * BYTES[dt]
+        out[op] += total
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def variant_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments (documented in DESIGN.md §4):
+    zamba2's weight-shared attention gets a 4096 sliding window for the
+    500k-decode shape (its full-attention block would otherwise carry an
+    O(S) cache per shared-block invocation — the SSM backbone is the
+    long-context path)."""
+    if shape.name == "long_500k" and cfg.name == "zamba2-2.7b":
+        return dataclasses.replace(cfg, sliding_window=4096)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.mode in ("train", "prefill"):
+        text = S
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            text = S - cfg.frontend_tokens
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.frontend_dim), cfg.jnp_dtype)
+        elif cfg.family == "audio":
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.frontend_dim), cfg.jnp_dtype)
+        batch["tokens"] = jax.ShapeDtypeStruct((B, text), tok)
+        return batch
+    # decode: ONE new token against a seq_len cache
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, B, S))
+    return {"token": jax.ShapeDtypeStruct((B, 1), tok),
+            "cache": cache,
+            "cache_index": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+def lower_one(cfg: ModelConfig, shape: InputShape, mesh, *,
+              fsdp: bool = True, remat: bool = True, microbatches: int = 1):
+    """Build shardings, lower and return (lowered, meta)."""
+    cfg = variant_config(cfg, shape)
+    p_abs = abstract_params(cfg)
+    p_shard = params_shardings(p_abs, mesh, fsdp=fsdp)
+    batch_abs = input_specs(cfg, shape)
+
+    if shape.mode == "train":
+        opt_abs = jax.eval_shape(init_opt_state, p_abs)
+        # optimizer state mirrors param shardings; step counter replicated
+        o_shard = type(opt_abs)(step=replicated(mesh),
+                                m=params_shardings(opt_abs.m, mesh, fsdp=fsdp),
+                                v=params_shardings(opt_abs.v, mesh, fsdp=fsdp))
+        b_shard = data_shardings(batch_abs, mesh)
+        step = make_train_step(cfg, OptimizerConfig(), remat=remat,
+                               microbatches=microbatches)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, replicated(mesh)),
+                     donate_argnums=(0, 1))
+        with mesh, activation_sharding(mesh):
+            lowered = fn.lower(p_abs, opt_abs, batch_abs)
+        return lowered, {"mode": "train"}
+
+    if shape.mode == "prefill":
+        b_shard = data_shardings(batch_abs, mesh)
+        step = make_prefill_step(cfg)
+        out_abs = jax.eval_shape(step, p_abs, batch_abs)
+        out_shard = data_shardings(out_abs, mesh)
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard),
+                     out_shardings=out_shard)
+        with mesh, activation_sharding(mesh):
+            lowered = fn.lower(p_abs, batch_abs)
+        return lowered, {"mode": "prefill"}
+
+    # decode
+    b_shard = data_shardings(batch_abs, mesh)
+    step = make_serve_step(cfg)
+    args_abs = (p_abs, batch_abs["cache"], batch_abs["token"],
+                batch_abs["cache_index"])
+    out_abs = jax.eval_shape(step, *args_abs)
+    out_shard = (data_shardings(out_abs[0], mesh),
+                 b_shard["cache"])
+    fn = jax.jit(step,
+                 in_shardings=(p_shard, b_shard["cache"], b_shard["token"],
+                               b_shard["cache_index"]),
+                 out_shardings=out_shard,
+                 donate_argnums=(1,))
+    with mesh, activation_sharding(mesh):
+        lowered = fn.lower(*args_abs)
+    return lowered, {"mode": "decode"}
+
+
+def analyse(lowered, compiled) -> Dict[str, Any]:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    out = {
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes": coll,
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        out[attr] = getattr(mem, attr, None)
+    return out
+
+
+def layer_costs(cfg, shape, mesh) -> Dict[str, Any]:
+    """Scan-body cost correction (see launch/roofline.py): measure each
+    scanned block standalone + its trip count."""
+    from repro.launch.roofline import lower_block_cost
+    out = {}
+    body = lower_block_cost(cfg, shape, mesh, collective_bytes)
+    out["bodies"] = [{"kind": "layer", "trips": cfg.num_layers, **body}]
+    if cfg.family == "hybrid":
+        shared = lower_block_cost(cfg, shape, mesh, collective_bytes,
+                                  kind="dense")
+        out["bodies"].append({"kind": "shared_attn",
+                              "trips": cfg.num_layers // cfg.hybrid_attn_every,
+                              **shared})
+    if cfg.family == "audio" and shape.mode != "decode":
+        enc_shape = dataclasses.replace(shape, seq_len=cfg.frontend_tokens)
+        enc = lower_block_cost(cfg, enc_shape, mesh, collective_bytes,
+                               kind="dense")
+        out["bodies"].append({"kind": "encoder", "trips": cfg.encoder_layers,
+                              **enc})
+    return out
+
+
+def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+               fsdp: bool = True, remat: bool = True, microbatches: int = 1,
+               verbose: bool = True, with_layer_costs: bool = False
+               ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if not applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention "
+                          "(DESIGN.md §4)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered, meta = lower_one(cfg, shape, mesh, fsdp=fsdp, remat=remat,
+                              microbatches=microbatches)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    res = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": dict(mesh.shape), "mode": meta["mode"],
+        "skipped": False, "fsdp": fsdp, "remat": remat,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": M.count_params_analytic(cfg),
+        "active_params": M.count_params_analytic(cfg, active_only=True),
+        **analyse(lowered, compiled),
+    }
+    if with_layer_costs:
+        try:
+            res["layer_costs"] = layer_costs(variant_config(cfg, shape),
+                                             shape, mesh)
+        except Exception as e:
+            res["layer_costs"] = {"error": f"{type(e).__name__}: {e}"}
+    if verbose:
+        mem_gb = (res["temp_size_in_bytes"] or 0) / 1024**3
+        arg_gb = (res["argument_size_in_bytes"] or 0) / 1024**3
+        print(f"[dryrun] {arch} × {shape_name} mesh={tuple(mesh.shape.values())}"
+              f" mode={meta['mode']} OK  flops={res['flops']:.3e}"
+              f" coll={res['collective_bytes']['total']:.3e}B"
+              f" temp={mem_gb:.2f}GiB args={arg_gb:.2f}GiB"
+              f" (lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+    return res
+
+
+# ---------------------------------------------------------------------------
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_configs(), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) baseline on the single-pod mesh")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--layer-costs", action="store_true",
+                    help="also measure per-block costs for the scan-body "
+                         "roofline correction")
+    ap.add_argument("--out", default=None, help="directory for JSON results")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in list_configs():
+            for s in sorted(INPUT_SHAPES):
+                combos.append((a, s, args.multi_pod))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    results = []
+    for arch, shape, mp in combos:
+        try:
+            res = run_dryrun(arch, shape, multi_pod=mp,
+                             fsdp=not args.no_fsdp, remat=not args.no_remat,
+                             with_layer_costs=args.layer_costs)
+        except Exception as e:  # record failures, keep sweeping
+            res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                   "skipped": False, "error": f"{type(e).__name__}: {e}"}
+            print(f"[dryrun] {arch} × {shape} FAILED: {res['error']}")
+        results.append(res)
+        if args.out:
+            import os as _os
+            _os.makedirs(args.out, exist_ok=True)
+            tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}.json"
+            with open(f"{args.out}/{tag}", "w") as f:
+                json.dump(res, f, indent=1)
+    n_bad = sum(1 for r in results if r.get("error"))
+    print(f"[dryrun] done: {len(results)} combos, {n_bad} failures")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

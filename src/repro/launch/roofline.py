@@ -1,0 +1,176 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+TPU v5e terms per (arch × shape × mesh):
+
+    compute    = FLOPs_per_chip  / (peak 197 TFLOP/s bf16)
+    memory     = HBM_bytes_per_chip / (819 GB/s)
+    collective = collective_bytes_per_chip / (50 GB/s effective ICI)
+
+``cost_analysis()`` semantics (measured, see EXPERIMENTS.md §Dry-run):
+  * 'flops' / 'bytes accessed' are PER-DEVICE totals;
+  * while-loop (lax.scan) bodies are counted ONCE, not × trip-count.
+
+The scan-over-layers correction: lower ONE layer body standalone (same
+shapes + shardings + activation constraints), cost-analyse it, and add
+(L_trips − 1) × body to the whole-program numbers.  For train mode the body
+is lowered through jax.value_and_grad (fwd+bwd), plus one extra forward for
+the remat recompute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.core.profiler import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import model as M
+from repro.models import transformer as tfm
+from repro.models.sharding import activation_sharding
+
+MODE_TRIPS = {  # scan trip counts per program
+    "train": lambda cfg: cfg.num_layers,
+    "prefill": lambda cfg: cfg.num_layers,
+    "decode": lambda cfg: cfg.num_layers,
+}
+
+
+def _block_kind(cfg) -> str:
+    # audio decoder body approximated as dense (the S×F cross-attention is
+    # small next to S×S self-attention); hybrid body = the Mamba layer, the
+    # shared attention block is measured separately by the harness.
+    return {"ssm": "ssm", "hybrid": "ssm", "audio": "dense"}.get(
+        cfg.family, "moe" if cfg.num_experts else "dense")
+
+
+def lower_block_cost(cfg: ModelConfig, shape: InputShape, mesh,
+                     collective_fn, kind: Optional[str] = None
+                     ) -> Dict[str, float]:
+    """Per-device cost of ONE transformer block at this shape (fwd, and
+    fwd+bwd for train), with the production shardings."""
+    from repro.launch.mesh import params_shardings, replicated
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    kind = kind or _block_kind(cfg)
+    dtype = cfg.jnp_dtype
+    B = shape.global_batch
+    S = shape.seq_len if shape.mode != "decode" else 1
+    if cfg.family == "vlm" and shape.mode != "decode":
+        S = shape.seq_len  # combined frontend+text length
+    positions = jnp.arange(S) if shape.mode != "decode" else jnp.zeros((1,), jnp.int32)
+
+    p_abs = jax.eval_shape(
+        lambda: tfm.init_block(jax.random.PRNGKey(0), cfg, dtype, kind))
+    p_shard = params_shardings(p_abs, mesh, fsdp=False)
+    x_abs = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bdiv = int(np.prod([mesh.shape[a] for a in baxes]))
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) \
+        if (B % bdiv == 0 and B >= bdiv) else None
+    x_shard = NamedSharding(mesh, P(bspec, None, None))
+
+    cache_abs = None
+    if shape.mode == "decode":
+        if kind == "ssm":
+            conv, ssm_s = __import__("repro.models.ssm", fromlist=["x"]
+                                     ).mamba_state_shapes(cfg, B)
+            cache_abs = (jax.ShapeDtypeStruct(conv, dtype),
+                         jax.ShapeDtypeStruct(ssm_s, jnp.float32))
+        else:
+            kv = jax.ShapeDtypeStruct(
+                (B, shape.seq_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+            cache_abs = {"self": {"k": kv, "v": kv}}
+
+    def fwd(p, x, cache):
+        y, _, aux = tfm.block_apply(
+            p, x, cfg, kind=kind,
+            mode="decode" if shape.mode == "decode" else "train",
+            positions=positions, cache=cache,
+            cache_index=jnp.int32(shape.seq_len - 1)
+            if shape.mode == "decode" else None)
+        return y
+
+    from repro.launch.mesh import data_shardings
+    c_shard = data_shardings(cache_abs, mesh) if cache_abs is not None else None
+
+    def run(step, extra_out_replicated=False):
+        fn = jax.jit(step, in_shardings=(p_shard, x_shard, c_shard))
+        with mesh, activation_sharding(mesh):
+            comp = fn.lower(p_abs, x_abs, cache_abs).compile()
+        ca = comp.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {"flops": float(ca.get("flops", 0)),
+                "bytes": float(ca.get("bytes accessed", 0)),
+                "coll": collective_fn(comp.as_text())["total"]}
+
+    cost_f = run(lambda p, x, c: fwd(p, x, c))
+    if shape.mode != "train":
+        return cost_f
+    cost_g = run(lambda p, x, c: jax.value_and_grad(
+        lambda pp: fwd(pp, x, c).astype(jnp.float32).sum())(p))
+    # remat adds one forward recompute on top of fwd+bwd
+    return {k: cost_g[k] + cost_f[k] for k in cost_f}
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mode: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_per_chip: float
+    model_flops: float           # 6·N(_active)·tokens, global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else float("nan")
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mode": self.mode,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode processes B tokens;
+    train counts fwd+bwd (6·), inference counts 2·N·D."""
+    n = M.count_params_analytic(cfg, active_only=bool(cfg.num_experts))
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # one token per sequence

@@ -1,0 +1,109 @@
+"""Distributed serving launcher with HeteroEdge collaborative offloading.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto]
+
+Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
+loop: profile a calibration batch, fit, solve for r*, then split every
+arriving batch between the primary and auxiliary node groups (halves of
+the device set; on 1 device both groups share it — the decision logic and
+accounting are identical).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.configs.base import get_config, list_configs, reduced
+from repro.data.pipeline import request_stream
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_configs(), default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--kv-int8", action="store_true")
+    ap.add_argument("--split", default="auto",
+                    help='"auto" (HeteroEdge solver), a float r, or "none"')
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    if args.kv_int8:
+        cfg = dataclasses.replace(cfg, kv_quant="int8")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"arch={cfg.name}{' (reduced)' if args.reduced else ''}"
+          f"{' kv=int8' if args.kv_int8 else ''}")
+
+    P = args.prompt_len
+    reqs = request_stream(cfg.vocab_size, n=args.requests, mean_prompt=P,
+                          seed=0, frontend_tokens=cfg.frontend_tokens,
+                          frontend_dim=(cfg.frontend_dim or cfg.d_model)
+                          if cfg.frontend else 0)
+    prompts = np.stack([np.pad(r.prompt[:P], (0, max(0, P - len(r.prompt))))
+                        for r in reqs]).astype(np.int32)
+    batch = {"tokens": prompts}
+    if cfg.frontend:
+        batch["frontend"] = np.stack([r.frontend for r in reqs])
+
+    def serve_task(b):
+        eng = ServingEngine(cfg, params, max_len=P + args.max_new + 8)
+        return eng.generate(np.asarray(b["tokens"]),
+                            max_new=args.max_new,
+                            frontend=b.get("frontend")).tokens
+
+    if args.split == "none":
+        t0 = time.perf_counter()
+        toks = serve_task(batch)
+        wall = time.perf_counter() - t0
+        print(f"local-only: {toks.shape} in {wall:.2f}s "
+              f"({args.requests * args.max_new / wall:.1f} tok/s)")
+        return
+
+    # --- HeteroEdge split -------------------------------------------------
+    devs = jax.devices()
+    half = max(1, len(devs) // 2)
+    primary = C.NodeGroup("primary", devs[:half], C.JETSON_NANO)
+    auxiliary = C.NodeGroup("auxiliary", devs[half:] or devs[:half],
+                            C.JETSON_XAVIER)
+    eng = C.OffloadEngine(lambda b: serve_task(b), primary, auxiliary,
+                          C.WIFI_5GHZ, payload_bytes_per_item=P * cfg.d_model * 2,
+                          jit=False)
+    if args.split == "auto":
+        # calibrate on a probe slice, synthesize profiles, solve
+        t0 = time.perf_counter()
+        serve_task({k: v[:2] for k, v in batch.items()})
+        probe = time.perf_counter() - t0
+        rs = [0.0, 0.3, 0.5, 0.7, 1.0]
+        aux_p, pri_p, off_p = (C.MeasuredProfile(n) for n in ("a", "p", "o"))
+        for r in rs:
+            aux_p.add(r, probe * r, 6 * r, 50 * r)
+            pri_p.add(r, probe * (1 - r) * 2.2, 5, 60 * (1 - r) + 15)
+            off_p.add(r, 0.01 * r * args.requests, 0, 0)
+        res = C.solve_split_ratio(
+            C.fit_profiles(aux_p, pri_p, off_p),
+            C.SolverConstraints(tau=probe * 2.2 * args.requests / 2))
+        r = res.r_opt
+        print(f"solver: r* = {r:.2f} (predicted T {res.t_opt:.2f}s)")
+    else:
+        r = float(args.split)
+    rep = eng.run(batch, r)
+    print(f"r={r:.2f}: local={rep.n_local} offloaded={rep.n_offloaded}  "
+          f"T_parallel={rep.t_parallel:.2f}s T_serial={rep.t_serial:.2f}s "
+          f"link={rep.t_offload_s*1e3:.1f}ms")
+    print("outputs:", rep.outputs.shape)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Shared neural layers: norms, MLPs, RoPE, embeddings.
+
+Pure-functional JAX: every layer is ``init(key, cfg, ...) -> params`` plus
+``apply(params, x, ...) -> y``.  Params are plain dict pytrees so they stack
+cleanly for ``jax.lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+
+def _hid(h):
+    """Constrain an MLP hidden activation (rank 2 or 3) to [batch, .., model]."""
+    return constrain(h, *(["batch"] + [None] * (h.ndim - 2) + ["model"]))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_init(cfg, d: int):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparametric":
+        return {}  # OLMo: no learned affine
+    raise ValueError(cfg.norm_type)
+
+
+def norm_apply(params, x, cfg, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:  # layernorm / nonparametric
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if cfg.norm_type == "layernorm":
+            y = y * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_up":   (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+            "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+        }
+    # squared_relu / gelu: plain 2-matrix MLP
+    return {
+        "w_up":   (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k2, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def mlp_apply(params, x, cfg):
+    if cfg.mlp_type == "swiglu":
+        g = _hid(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+        u = _hid(jnp.einsum("...d,df->...f", x, params["w_up"]))
+        h = jax.nn.silu(g) * u
+    elif cfg.mlp_type == "squared_relu":
+        h = _hid(jnp.einsum("...d,df->...f", x, params["w_up"]))
+        h = jnp.square(jax.nn.relu(h))
+    else:  # gelu
+        h = _hid(jnp.einsum("...d,df->...f", x, params["w_up"]))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, dh]; positions: [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+def embed_init(key, vocab: int, d_model: int, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embed_apply(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_apply(params, x, *, tied_table=None):
+    table = tied_table if tied_table is not None else params["table"]
+    return jnp.einsum("...d,vd->...v", x, table)

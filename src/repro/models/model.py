@@ -1,0 +1,252 @@
+"""Top-level model: init / forward for every assigned architecture family.
+
+Public API
+----------
+init_params(cfg, key)                     -> params pytree
+init_cache(cfg, batch, seq_len)           -> decode cache pytree
+forward(params, cfg, batch, mode=...)     -> ModelOutputs
+count_params_analytic(cfg)                -> int  (N; active_only for MoE)
+
+``batch`` is a dict:
+  train/prefill: {"tokens": [B,S]}  (+"frontend": [B,F,fd] for vlm/audio)
+  decode:        {"token": [B,1], "cache": ..., "cache_index": scalar}
+                 (+"frontend" unused at decode)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tfm
+from repro.models import ssm as ssm_mod
+from repro.models import sharding as shard
+from repro.models.layers import (embed_apply, embed_init, norm_apply,
+                                 norm_init, unembed_apply)
+
+
+@dataclass
+class ModelOutputs:
+    logits: Any           # [B,S,V] (train/prefill: over token positions)
+    aux_loss: Any         # scalar router aux
+    cache: Any = None     # decode/prefill caches
+    loss_mask: Any = None # [S] bool — positions that contribute to the LM loss
+
+
+def _kind(cfg) -> str:
+    if cfg.family == "ssm":
+        return "ssm"
+    if cfg.family == "hybrid":
+        return "hybrid"
+    if cfg.family == "moe" or cfg.num_experts:
+        return "moe"
+    if cfg.family == "audio":
+        return "decoder_x"
+    return "dense"
+
+
+# ---------------------------------------------------------------------------
+def init_params(cfg, key) -> Dict[str, Any]:
+    dtype = cfg.jnp_dtype
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+    kind = _kind(cfg)
+    if kind == "hybrid":
+        params["blocks"] = {
+            "backbone": tfm.init_stack(keys[1], cfg, dtype, "ssm", cfg.num_layers),
+            "shared": tfm.init_block(keys[2], cfg, dtype, "dense"),
+        }
+    else:
+        params["blocks"] = tfm.init_stack(keys[1], cfg, dtype, kind, cfg.num_layers)
+    if cfg.encoder_layers:
+        params["encoder"] = tfm.init_stack(keys[3], cfg, dtype, "encoder",
+                                           cfg.encoder_layers)
+        params["enc_norm"] = norm_init(cfg, cfg.d_model)
+    if cfg.frontend:
+        fd = cfg.frontend_dim or cfg.d_model
+        params["frontend_proj"] = (
+            jax.random.normal(keys[4], (fd, cfg.d_model)) / np.sqrt(fd)).astype(dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[5], cfg.vocab_size, cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, seq_len: int, dtype=None) -> Any:
+    """Decode caches sized for seq_len total positions."""
+    dtype = dtype or cfg.jnp_dtype
+    kind = _kind(cfg)
+    L = cfg.num_layers
+
+    def kv(n_layers, length, quant=True):
+        if quant and cfg.kv_quant == "int8":
+            # per-(position, head) scales; ~2x HBM for the dominant buffer
+            return {"k": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, cfg.head_dim), jnp.int8),
+                    "k_scale": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, 1), jnp.float32),
+                    "v": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, cfg.head_dim), jnp.int8),
+                    "v_scale": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, 1), jnp.float32)}
+        return {"k": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((n_layers, batch, length, cfg.num_kv_heads, cfg.head_dim), dtype)}
+
+    def ssm_states(n_layers):
+        conv, ssm = ssm_mod.mamba_state_shapes(cfg, batch)
+        return (jnp.zeros((n_layers, *conv), dtype),
+                jnp.zeros((n_layers, *ssm), jnp.float32))
+
+    if kind == "ssm":
+        return ssm_states(L)
+    if kind == "hybrid":
+        nb = L // cfg.hybrid_attn_every
+        return {"backbone": ssm_states(L),
+                "shared": {"self": kv(nb, seq_len)}}
+    if kind == "decoder_x":
+        self_kv = {"self": kv(L, seq_len)}
+        self_kv["cross"] = kv(L, cfg.frontend_tokens, quant=False)
+        return self_kv
+    return {"self": kv(L, seq_len)}
+
+
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg, batch):
+    """Returns (x [B,S,D], positions [S], loss_mask [S])."""
+    tokens = batch["tokens"]
+    x = shard.constrain(embed_apply(params["embed"], tokens),
+                        "batch", None, None)
+    S = tokens.shape[1]
+    if cfg.frontend and cfg.family == "vlm":
+        fe = batch["frontend"].astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+        S_total = x.shape[1]
+        positions = jnp.arange(S_total)
+        loss_mask = jnp.arange(S_total) >= cfg.frontend_tokens
+        return x, positions, loss_mask
+    return x, jnp.arange(S), jnp.ones((S,), bool)
+
+
+def _encode(params, cfg, batch):
+    """Audio encoder over stubbed frame embeddings."""
+    fe = batch["frontend"].astype(cfg.jnp_dtype) @ params["frontend_proj"]
+    pos = jnp.arange(fe.shape[1])
+    enc, _, _ = tfm.stack_apply(params["encoder"], fe, cfg, kind="encoder",
+                                mode="train", positions=pos, causal=False)
+    return norm_apply(params["enc_norm"], enc, cfg), pos
+
+
+# ---------------------------------------------------------------------------
+def forward(params, cfg, batch, *, mode: str = "train", remat: bool = False,
+            use_pallas: bool = False) -> ModelOutputs:
+    kind = _kind(cfg)
+
+    if mode in ("train", "prefill"):
+        x, positions, loss_mask = _embed_inputs(params, cfg, batch)
+        enc_out = enc_pos = None
+        if kind == "decoder_x":
+            enc_out, enc_pos = _encode(params, cfg, batch)
+        if kind == "hybrid":
+            x, caches, aux = tfm.hybrid_apply(
+                params["blocks"], x, cfg, mode=mode, positions=positions,
+                remat=remat, use_pallas=use_pallas)
+        else:
+            x, caches, aux = tfm.stack_apply(
+                params["blocks"], x, cfg, kind=kind, mode=mode,
+                positions=positions, enc_out=enc_out, enc_positions=enc_pos,
+                remat=remat, use_pallas=use_pallas)
+        x = norm_apply(params["final_norm"], x, cfg)
+        if mode == "prefill":
+            x = x[:, -1:]  # only the last position's logits are needed
+        logits = unembed_apply(
+            params.get("lm_head"), x,
+            tied_table=params["embed"]["table"] if cfg.tie_embeddings else None)
+        logits = shard.constrain(logits, "batch", None, "model")
+        return ModelOutputs(logits=logits, aux_loss=aux,
+                            cache=caches if mode == "prefill" else None,
+                            loss_mask=loss_mask)
+
+    assert mode == "decode"
+    token, cache, idx = batch["token"], batch["cache"], batch["cache_index"]
+    x = embed_apply(params["embed"], token)
+    positions = jnp.full((1,), idx, jnp.int32)
+    if kind == "hybrid":
+        x, caches, aux = tfm.hybrid_apply(
+            params["blocks"], x, cfg, mode="decode", positions=positions,
+            caches=cache, cache_index=idx, use_pallas=use_pallas)
+    else:
+        x, caches, aux = tfm.stack_apply(
+            params["blocks"], x, cfg, kind=kind, mode="decode",
+            positions=positions, caches=cache, cache_index=idx,
+            use_pallas=use_pallas)
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = unembed_apply(
+        params.get("lm_head"), x,
+        tied_table=params["embed"]["table"] if cfg.tie_embeddings else None)
+    logits = shard.constrain(logits, "batch", None, "model")
+    return ModelOutputs(logits=logits, aux_loss=aux, cache=caches)
+
+
+# ---------------------------------------------------------------------------
+def cross_entropy(logits, labels, mask=None):
+    """Memory-lean CE: f32 logsumexp over vocab-sharded logits; the gold
+    logit is picked with a one-hot contraction (sharding-friendly — a
+    take_along_axis over the sharded vocab dim would force a gather)."""
+    lf = logits.astype(jnp.float32)
+    lf = shard.constrain(lf, *(["batch"] + [None] * (lf.ndim - 2) + ["model"]))
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=jnp.float32)
+    gold = jnp.einsum("...v,...v->...", lf, onehot)
+    nll = lse - gold
+    if mask is not None:
+        m = jnp.broadcast_to(mask, nll.shape).astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+def count_params_analytic(cfg, active_only: bool = False) -> int:
+    d, f, dh = cfg.d_model, cfg.d_ff, cfg.head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    attn_p = d * h * dh * 2 + d * hkv * dh * 2 if h else 0
+
+    def mlp_p(width):
+        return (3 if cfg.mlp_type == "swiglu" else 2) * d * width
+
+    di, n = cfg.d_inner, cfg.ssm_state
+    if cfg.ssm_state:
+        mamba_p = d * 2 * di + cfg.ssm_conv * di + di + di * d + di
+        if cfg.mamba_version == 1:
+            r = cfg.ssm_dt_rank
+            mamba_p += di * (r + 2 * n) + r * di + di + di * n
+        else:
+            hs = di // cfg.ssm_head_dim
+            mamba_p += di * 2 * n + di * hs + 3 * hs
+    else:
+        mamba_p = 0
+
+    if cfg.family in ("ssm",):
+        layer = mamba_p
+        total = cfg.num_layers * layer
+    elif cfg.family == "hybrid":
+        total = cfg.num_layers * mamba_p + (attn_p + mlp_p(f))  # shared block once
+    elif cfg.num_experts:
+        e_frac = (cfg.experts_per_token / cfg.num_experts) if active_only else 1.0
+        expert = 3 * d * f * cfg.num_experts * e_frac
+        shared = mlp_p(f * cfg.num_shared_experts) if cfg.num_shared_experts else 0
+        layer = attn_p + d * cfg.num_experts + expert + shared
+        total = cfg.num_layers * layer
+    else:
+        layer = attn_p + mlp_p(f)
+        total = cfg.num_layers * layer
+        if cfg.encoder_layers:
+            # decoder layers also carry cross-attention
+            total += cfg.num_layers * attn_p
+            total += cfg.encoder_layers * (attn_p + mlp_p(f))
+
+    total += cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.frontend:
+        total += (cfg.frontend_dim or d) * d
+    return int(total)

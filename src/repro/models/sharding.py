@@ -1,0 +1,66 @@
+"""Activation sharding hints (MaxText-style logical constraints).
+
+GSPMD propagates parameter shardings well through plain einsums but loses
+them inside lax.scan / lax.map bodies and around reshapes — at train_4k
+scale an unsharded [B,S,V] logits tensor alone is ~0.5 TB.  The model code
+calls ``constrain(x, "batch", None, "model")`` at the handful of points
+that matter; outside a mesh context (CPU tests) it is a no-op.
+
+Logical names:
+  "batch" -> all batch axes present in the mesh ("pod","data")
+  "data"  -> the data axis only
+  "model" -> the model axis (applied only when the dim is divisible)
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None}
+
+
+@contextmanager
+def activation_sharding(mesh):
+    """Enable constraints for code traced within this context."""
+    old = _STATE["mesh"]
+    _STATE["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _STATE["mesh"] = old
+
+
+def active_mesh():
+    return _STATE["mesh"]
+
+
+def constrain(x, *logical):
+    """Apply a sharding constraint described by logical axis names."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    assert len(logical) == x.ndim, (logical, x.shape)
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            spec.append(None)
+            continue
+        if name == "batch":
+            axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        elif name == "data":
+            axes = ("data",) if "data" in mesh.shape else ()
+        elif name == "model":
+            axes = ("model",) if "model" in mesh.shape else ()
+        else:
+            raise ValueError(name)
+        div = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if axes and dim % div == 0 and dim >= div:
+            spec.append(axes if len(axes) > 1 else axes[0])
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

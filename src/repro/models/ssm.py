@@ -1,0 +1,288 @@
+"""State-space (Mamba) blocks.
+
+Mamba-1 (falcon-mamba): diagonal input-independent A [d_inner, N] with
+input-dependent B/C/Δ — implemented as a chunked associative scan so the
+[B,S,d_inner,N] expansion is only ever materialized per chunk.
+
+Mamba-2 (zamba2): scalar-A-per-head SSD formulation — intra-chunk
+attention-like matmuls + inter-chunk state passing.  Matmul-dominant, which
+is what the TPU MXU wants (see DESIGN.md hardware-adaptation notes).
+
+Both expose a single-step ``*_decode`` used by serve_step with carried
+(conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def mamba_init(key, cfg, dtype):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.5).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) / np.sqrt(di)).astype(dtype),
+        "D": jnp.ones((di,), jnp.float32),
+    }
+    if cfg.mamba_version == 1:
+        r = cfg.ssm_dt_rank
+        p.update({
+            "x_proj": (jax.random.normal(ks[3], (di, r + 2 * n)) / np.sqrt(di)).astype(dtype),
+            "dt_proj": (jax.random.normal(ks[4], (r, di)) / np.sqrt(r)).astype(dtype),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.clip(jax.random.uniform(ks[5], (di,)) * 0.099 + 0.001, 1e-4))),
+            "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        })
+    else:  # mamba2 (SSD): scalar A per head, shared B/C group
+        h = di // cfg.ssm_head_dim
+        p.update({
+            "bc_proj": (jax.random.normal(ks[3], (di, 2 * n)) / np.sqrt(di)).astype(dtype),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.clip(jax.random.uniform(ks[5], (h,)) * 0.099 + 0.001, 1e-4))),
+            "dt_proj": (jax.random.normal(ks[4], (di, h)) / np.sqrt(di)).astype(dtype),
+            "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+            "D": jnp.ones((h,), jnp.float32),
+        })
+    return p
+
+
+def mamba_state_shapes(cfg, batch: int):
+    """(conv_state, ssm_state) shapes for one layer."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv = (batch, cfg.ssm_conv - 1, di)
+    if cfg.mamba_version == 1:
+        ssm = (batch, di, n)
+    else:
+        h = di // cfg.ssm_head_dim
+        ssm = (batch, h, cfg.ssm_head_dim, n)
+    return conv, ssm
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+def _causal_conv(u, w, b, conv_state=None):
+    """u: [B,S,di]; w: [W,di].  Returns (y, new_state[B,W-1,di])."""
+    W = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([conv_state, u], axis=1)          # [B,S+W-1,di]
+    y = sum(ext[:, i:i + u.shape[1]] * w[i] for i in range(W))
+    new_state = ext[:, -(W - 1):] if W > 1 else conv_state
+    return jax.nn.silu(y + b), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1: chunked associative scan
+# ---------------------------------------------------------------------------
+def _scan_chunked(decay, bx, h0, chunk: int):
+    """h_t = decay_t * h_{t-1} + bx_t, scan over axis=1 of [B,S,...].
+    Returns (h_all [B,S,...], h_last)."""
+    B, S = decay.shape[:2]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    dec = decay.reshape(B, nc, chunk, *decay.shape[2:])
+    bxs = bx.reshape(B, nc, chunk, *bx.shape[2:])
+
+    def outer(h, inp):
+        d, b = inp                                           # [B,chunk,...]
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        A, Bc = jax.lax.associative_scan(combine, (d, b), axis=1)
+        h_all = A * h[:, None] + Bc                          # [B,chunk,...]
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(
+        outer, h0, (jnp.moveaxis(dec, 1, 0), jnp.moveaxis(bxs, 1, 0)))
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(B, S, *decay.shape[2:])
+    return h_all, h_last
+
+
+def mamba1_scan(u, delta, A, Bm, Cm, D, h0=None, chunk: int = 256,
+                out_dtype=jnp.float32):
+    """u,delta: [B,S,di]; A: [di,N]; Bm,Cm: [B,S,N]; h0: [B,di,N].
+    Returns (y [B,S,di], h_last [B,di,N]).
+
+    The [B,·,di,N] state expansion is only ever materialized per chunk —
+    decay/bx are computed INSIDE the chunk body (materializing them over
+    the full sequence would be O(S·di·N) tensors, terabytes at train_4k)."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0)
+
+    def body(h, inp):
+        uc, dc, bc, cc = inp                                 # [B,C,...]
+        decay = jnp.exp(dc[..., None] * A[None, None])       # [B,C,di,N]
+        bx = (dc * uc)[..., None] * bc[:, :, None, :]        # [B,C,di,N]
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        Ac, Bc = jax.lax.associative_scan(combine, (decay, bx), axis=1)
+        h_all = Ac * h[:, None] + Bc                         # [B,C,di,N]
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, cc) + D * uc
+        return h_all[:, -1], y.astype(out_dtype)
+
+    h_last, y_chunks = jax.lax.scan(
+        body, h0, (to_chunks(u), to_chunks(delta), to_chunks(Bm), to_chunks(Cm)))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B, S, di)
+    return y, h_last
+
+
+def mamba1_step(u, delta, A, Bm, Cm, D, h):
+    """Single decode step.  u,delta: [B,di]; Bm,Cm: [B,N]; h: [B,di,N]."""
+    decay = jnp.exp(delta[..., None] * A[None])
+    h = decay * h + (delta * u)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + D * u
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2: SSD (chunked matmul formulation)
+# ---------------------------------------------------------------------------
+def mamba2_ssd(x, dt, A, Bm, Cm, D, h0=None, chunk: int = 256,
+               out_dtype=jnp.float32):
+    """x: [B,S,H,P]; dt: [B,S,H] (post-softplus); A: [H] (negative);
+    Bm,Cm: [B,S,N]; h0: [B,H,P,N].  Returns (y [B,S,H,P], h_last)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    xb = x.reshape(B, nc, chunk, H, P)
+    dtb = dt.reshape(B, nc, chunk, H)
+    Bb = Bm.reshape(B, nc, chunk, N)
+    Cb = Cm.reshape(B, nc, chunk, N)
+    dA = dtb * A[None, None, None]                           # [B,nc,C,H]  (<=0)
+    cum = jnp.cumsum(dA, axis=2)                             # within-chunk cumsum
+
+    def step(h, inp):
+        xc, dtc, bc, cc, cumc = inp                          # chunk tensors
+        xc = xc.astype(jnp.float32)
+        bc = bc.astype(jnp.float32)
+        cc = cc.astype(jnp.float32)
+        # intra-chunk: Y[t] = sum_{s<=t} exp(cum_t - cum_s) (C_t·B_s) dt_s x_s
+        li = cumc[:, :, None, :] - cumc[:, None, :, :]       # [B,C,C,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        # mask BEFORE exp: the upper triangle holds positive arguments that
+        # overflow to inf, and a post-hoc where() would still leak NaNs
+        # into the gradient of exp
+        Lm = jnp.exp(jnp.where(tri, li, -jnp.inf))
+        Lm = jnp.where(tri, Lm, 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)              # [B,C,C]
+        w = Lm * cb[..., None]                               # [B,C,C,H]
+        y_intra = jnp.einsum("btsh,bsh,bshp->bthp", w, dtc, xc)
+        # inter-chunk: Y[t] += exp(cum_t) C_t · h_in
+        y_inter = jnp.einsum("bth,btn,bhpn->bthp", jnp.exp(cumc), cc, h)
+        # state update: h' = exp(cum_last) h + sum_s exp(cum_last-cum_s) dt_s B_s x_s
+        seg = jnp.exp(cumc[:, -1:, :] - cumc)                # [B,C,H]
+        h_new = (jnp.exp(cumc[:, -1])[:, :, None, None] * h
+                 + jnp.einsum("bsh,bsn,bshp->bhpn", seg * dtc, bc, xc))
+        return h_new, (y_intra + y_inter).astype(out_dtype)
+
+    h_last, yb = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xb, 1, 0), jnp.moveaxis(dtb, 1, 0),
+         jnp.moveaxis(Bb, 1, 0), jnp.moveaxis(Cb, 1, 0),
+         jnp.moveaxis(cum, 1, 0)))
+    y = jnp.moveaxis(yb, 0, 1).reshape(B, S, H, P)
+    y = y + (D[None, None, :, None] * x.astype(jnp.float32)).astype(out_dtype)
+    return y, h_last
+
+
+def mamba2_step(x, dt, A, Bm, Cm, D, h):
+    """x: [B,H,P]; dt: [B,H]; Bm,Cm: [B,N]; h: [B,H,P,N]."""
+    decay = jnp.exp(dt * A[None])                            # [B,H]
+    h = decay[..., None, None] * h + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), x.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32))
+    return y + D[None, :, None] * x.astype(jnp.float32), h
+
+
+# ---------------------------------------------------------------------------
+# Full block forward
+# ---------------------------------------------------------------------------
+def mamba_apply(params, x, cfg, *, state=None, mode: str = "full",
+                scan_chunk: int = 256):
+    """x: [B,S,D] ("full") or [B,1,D] ("decode").
+    state: None or (conv_state, ssm_state).  Returns (y, new_state)."""
+    B = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_state, ssm_state = state if state is not None else (None, None)
+
+    uz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)                         # [B,S,di] each
+    u = constrain(u, "batch", None, "model")
+    z = constrain(z, "batch", None, "model")
+    u, conv_new = _causal_conv(u, params["conv_w"], params["conv_b"], conv_state)
+
+    if cfg.mamba_version == 1:
+        A = -jnp.exp(params["A_log"])                        # [di,N]
+        dbc = jnp.einsum("bsd,de->bse", u, params["x_proj"])
+        dt_r, Bm, Cm = jnp.split(dbc, [cfg.ssm_dt_rank, cfg.ssm_dt_rank + n], axis=-1)
+        delta = jax.nn.softplus(
+            jnp.einsum("bsr,rd->bsd", dt_r, params["dt_proj"]).astype(jnp.float32)
+            + params["dt_bias"])
+        uf = u.astype(jnp.float32)
+        Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+        if mode == "full":
+            if ssm_state is None:
+                ssm_state = jnp.zeros((B, di, n), jnp.float32)
+            y, h_last = mamba1_scan(uf, delta, A, Bf, Cf, params["D"],
+                                    ssm_state, chunk=scan_chunk,
+                                    out_dtype=x.dtype)
+        else:
+            y, h_last = mamba1_step(uf[:, 0], delta[:, 0], A, Bf[:, 0],
+                                    Cf[:, 0], params["D"], ssm_state)
+            y = y[:, None]
+    else:
+        H, P = di // cfg.ssm_head_dim, cfg.ssm_head_dim
+        A = -jnp.exp(params["A_log"])                        # [H]
+        bc = jnp.einsum("bsd,de->bse", u, params["bc_proj"])
+        Bm, Cm = jnp.split(bc, 2, axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsd,dh->bsh", u, params["dt_proj"]).astype(jnp.float32)
+            + params["dt_bias"])
+        xh = u.reshape(B, -1, H, P)
+        if mode == "full":
+            if ssm_state is None:
+                ssm_state = jnp.zeros((B, H, P, n), jnp.float32)
+            y, h_last = mamba2_ssd(xh, dt, A, Bm, Cm, params["D"],
+                                   ssm_state, chunk=scan_chunk,
+                                   out_dtype=x.dtype)
+            y = y.reshape(B, -1, di)
+        else:
+            y, h_last = mamba2_step(xh[:, 0], dt[:, 0], A, Bm[:, 0],
+                                    Cm[:, 0], params["D"], ssm_state)
+            y = y.reshape(B, 1, di)
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, params["out_proj"])
+    return out, (conv_new, h_last)

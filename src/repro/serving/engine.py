@@ -1,0 +1,129 @@
+"""Serving engine: prefill + decode steps, batched generation.
+
+``make_prefill_step`` / ``make_serve_step`` return the pure functions the
+dry-run lowers (prefill_32k → prefill_step; decode shapes → serve_step:
+ONE new token against a seq_len cache).  ``ServingEngine`` wraps them into
+a batched greedy-decoding loop and plugs into the HeteroEdge
+``OffloadEngine`` as the task function for the collaborative-serving
+examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+def make_prefill_step(cfg, *, use_pallas: bool = False):
+    """(params, batch) -> (last_logits [B,V], caches)."""
+    def prefill_step(params, batch):
+        out = M.forward(params, cfg, batch, mode="prefill", use_pallas=use_pallas)
+        return out.logits[:, -1], out.cache
+    return prefill_step
+
+
+def make_serve_step(cfg, *, use_pallas: bool = False):
+    """(params, cache, token [B,1], cache_index) -> (logits [B,V], cache)."""
+    def serve_step(params, cache, token, cache_index):
+        out = M.forward(params, cfg,
+                        {"token": token, "cache": cache,
+                         "cache_index": cache_index},
+                        mode="decode", use_pallas=use_pallas)
+        return out.logits[:, 0], out.cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+def seed_cache(cfg, big_cache, prefill_cache, prefill_len: int):
+    """Copy prefill caches (length P buffers) into full-size decode buffers."""
+    kind = M._kind(cfg)
+
+    def copy_kv(dst, src):
+        if "self" in dst:  # unwrap {"self": ...} wrappers (hybrid shared)
+            return {key: copy_kv(dst[key], src[key]) for key in dst}
+        if "k_scale" in dst and "k_scale" not in src:
+            # int8 destination seeded from a bf16 prefill cache
+            from repro.models.attention import quantize_kv
+            out = {}
+            for name in ("k", "v"):
+                qt, sc = quantize_kv(src[name])
+                out[name] = jax.lax.dynamic_update_slice_in_dim(
+                    dst[name], qt, 0, axis=2)
+                out[name + "_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                    dst[name + "_scale"], sc, 0, axis=2)
+            return out
+        return jax.tree.map(
+            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
+                d, s.astype(d.dtype), 0, axis=2), dst, src)
+
+    if kind == "ssm":
+        return jax.tree.map(lambda d, s: s.astype(d.dtype), big_cache, prefill_cache)
+    if kind == "hybrid":
+        return {"backbone": jax.tree.map(lambda d, s: s.astype(d.dtype),
+                                         big_cache["backbone"],
+                                         prefill_cache["backbone"]),
+                "shared": copy_kv(big_cache["shared"], prefill_cache["shared"])}
+    out = {"self": copy_kv(big_cache["self"], prefill_cache["self"])}
+    if "cross" in big_cache:
+        out["cross"] = jax.tree.map(lambda d, s: s.astype(d.dtype),
+                                    big_cache["cross"], prefill_cache["cross"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # [B, max_new]
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class ServingEngine:
+    """Batched greedy generation with a fixed-capacity KV/SSM cache."""
+
+    def __init__(self, cfg, params, *, max_len: int = 512,
+                 use_pallas: bool = False):
+        self.cfg, self.params, self.max_len = cfg, params, max_len
+        self.prefill = jax.jit(make_prefill_step(cfg, use_pallas=use_pallas))
+        self.step = jax.jit(make_serve_step(cfg, use_pallas=use_pallas))
+
+    def generate(self, prompts: np.ndarray, max_new: int = 16,
+                 frontend: Optional[np.ndarray] = None) -> GenerationResult:
+        """prompts: [B, P] int32 (pre-padded)."""
+        cfg = self.cfg
+        B, P = prompts.shape
+        batch = {"tokens": jnp.asarray(prompts)}
+        if frontend is not None:
+            batch["frontend"] = jnp.asarray(frontend)
+        t0 = time.perf_counter()
+        last_logits, pre_cache = jax.block_until_ready(
+            self.prefill(self.params, batch))
+        t_prefill = time.perf_counter() - t0
+
+        total = self.max_len
+        offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
+        cache = M.init_cache(cfg, B, total, dtype=cfg.jnp_dtype)
+        cache = seed_cache(cfg, cache, pre_cache, P + offset)
+
+        tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
+        out_toks = [np.asarray(tok)]
+        idx = P + offset
+        t0 = time.perf_counter()
+        for _ in range(max_new - 1):
+            logits, cache = self.step(self.params, cache, tok, jnp.int32(idx))
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out_toks.append(np.asarray(tok))
+            idx += 1
+        jax.block_until_ready(tok)
+        t_decode = time.perf_counter() - t0
+        toks = np.concatenate(out_toks, axis=1)
+        return GenerationResult(
+            tokens=toks, prefill_s=t_prefill, decode_s=t_decode,
+            tokens_per_s=B * max_new / max(t_decode + t_prefill, 1e-9))

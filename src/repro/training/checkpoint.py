@@ -1,0 +1,67 @@
+"""Checkpointing: save/restore param + optimizer pytrees to .npz.
+
+No orbax dependency — flat key paths + numpy arrays, with a small JSON
+manifest for tree structure and metadata.  Atomic via tmp-file rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None,
+                    metadata: Optional[dict] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"params/" + k: v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({"opt/" + k: v for k, v in _flatten(opt_state).items()})
+    treedefs = {
+        "params": jax.tree_util.tree_structure(params),
+        "opt": jax.tree_util.tree_structure(opt_state) if opt_state is not None else None,
+    }
+    manifest = {
+        "metadata": metadata or {},
+        "params_treedef": str(treedefs["params"]),
+        "has_opt": opt_state is not None,
+    }
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    os.close(fd)
+    np.savez(tmp, __manifest__=json.dumps(manifest), **payload)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def restore_checkpoint(path: str, params_like, opt_like=None) -> Tuple[Any, Any, dict]:
+    """Restore into the structure of `params_like` / `opt_like` templates."""
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["__manifest__"]))
+        flat = {k: z[k] for k in z.files if k != "__manifest__"}
+
+    def rebuild(template, prefix):
+        leaves_p, tdef = jax.tree_util.tree_flatten_with_path(template)
+        out = []
+        for path, leaf in leaves_p:
+            key = prefix + "/".join(
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            arr = flat[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            out.append(jnp.asarray(arr, leaf.dtype))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), out)
+
+    params = rebuild(params_like, "params/")
+    opt = rebuild(opt_like, "opt/") if (opt_like is not None and manifest["has_opt"]) else None
+    return params, opt, manifest["metadata"]

@@ -1,0 +1,83 @@
+"""AdamW + cosine/linear-warmup schedule, pure JAX (no optax dependency).
+
+Optimizer state is a pytree mirroring params (m, v) + a scalar step count,
+so pjit shards it with the same rules as the parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr * 0.5 * (
+        1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state: OptState, params):
+    """Returns (new_params, new_state, stats)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    b1, b2 = cfg.betas
+    lr = lr_at(cfg, step)
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m / bc1, v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (standard practice)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    stats = {"grad_norm": gn, "lr": lr}
+    return new_p, OptState(step, new_m, new_v), stats

@@ -1,0 +1,109 @@
+"""Training step + loop.
+
+``make_train_step(cfg, opt_cfg)`` returns the pure function lowered by the
+dry-run and jitted by the trainer:  (params, opt_state, batch) ->
+(params, opt_state, metrics).  Loss = next-token CE (+ MoE router aux).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.training.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                      init_opt_state)
+
+
+def loss_fn(params, cfg, batch, *, remat: bool = True):
+    out = M.forward(params, cfg, batch, mode="train", remat=remat)
+    tokens = batch["tokens"]
+    # next-token prediction over the text positions
+    logits = out.logits[:, :-1] if out.loss_mask is None else out.logits
+    if cfg.family == "vlm":
+        # logits cover [frontend | text]; predict text tokens from the
+        # position before each (frontend tail predicts first text token)
+        F = cfg.frontend_tokens
+        logits = out.logits[:, F - 1:-1]
+        labels = tokens
+        ce = M.cross_entropy(logits, labels)
+    else:
+        labels = tokens[:, 1:]
+        ce = M.cross_entropy(out.logits[:, :-1], labels)
+    return ce + out.aux_loss, {"ce": ce, "aux": out.aux_loss}
+
+
+def make_train_step(cfg, opt_cfg: OptimizerConfig, *, remat: bool = True,
+                    microbatches: int = 1):
+    """microbatches > 1: split the global batch and accumulate gradients
+    over a lax.scan — activation working set shrinks ×microbatches at
+    identical math (the §Perf memory-term lever for the MoE train shapes)."""
+    def train_step(params, opt_state: OptState, batch):
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, remat=remat),
+                has_aux=True)(params)
+        else:
+            def split(a):
+                b = a.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return a.reshape(microbatches, b // microbatches, *a.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                gsum, lsum, asum = carry
+                (l, parts), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mb, remat=remat),
+                    has_aux=True)(params)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l, asum + parts["aux"]), None
+
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                acc, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            parts = {"ce": loss - asum / microbatches,
+                     "aux": asum / microbatches}
+        params, opt_state, stats = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **parts, **stats}
+        return params, opt_state, metrics
+    return train_step
+
+
+@dataclass
+class TrainReport:
+    steps: int
+    final_loss: float
+    first_loss: float
+    wall_s: float
+    losses: list
+
+
+def train_loop(cfg, params, data_iter: Iterator[Dict[str, Any]],
+               opt_cfg: Optional[OptimizerConfig] = None, *, steps: int = 100,
+               log_every: int = 10, remat: bool = False,
+               callback: Optional[Callable] = None) -> tuple:
+    """Single-host training loop used by the examples and integration tests."""
+    opt_cfg = opt_cfg or OptimizerConfig(total_steps=steps)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=remat))
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            l = float(metrics["loss"])
+            losses.append(l)
+            if callback:
+                callback(i, metrics)
+    wall = time.perf_counter() - t0
+    report = TrainReport(steps=steps, final_loss=losses[-1],
+                         first_loss=losses[0], wall_s=wall, losses=losses)
+    return params, opt_state, report

@@ -1,0 +1,22 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run's 512 placeholder devices
+# are set only inside repro.launch.dryrun, never globally)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _single_device_guard():
+    assert len(jax.devices()) >= 1
+    assert "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""), "tests must not inherit the dry-run device count"

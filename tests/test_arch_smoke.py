@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED variant
+of each family (2 layers, d_model<=512, <=4 experts) runs one forward and
+one train step on CPU; output shapes + no NaNs asserted.  The FULL configs
+are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, list_configs, reduced
+from repro.configs.shapes import INPUT_SHAPES, applicable
+from repro.models import model as M
+from repro.serving.engine import seed_cache
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train import make_train_step
+
+ARCHS = list_configs()
+
+
+def _batch(cfg, B=2, S=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 2)
+    b = {"tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend:
+        b["frontend"] = jax.random.normal(
+            ks[1], (B, cfg.frontend_tokens, cfg.frontend_dim))
+    return b
+
+
+def test_all_ten_archs_registered():
+    assert len(ARCHS) == 10
+    fams = {get_config(a).family for a in ARCHS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_within_limits(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    out = M.forward(params, cfg, _batch(cfg, B, S), mode="train")
+    S_total = S + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    assert out.logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.isfinite(out.logits).all())
+    assert bool(jnp.isfinite(out.aux_loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, OptimizerConfig(), remat=False))
+    params2, opt2, metrics = step(params, opt, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_consistency(arch):
+    """Decode (1 token + cache) must match the full-forward logits."""
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = _batch(cfg, B, S, key=3)
+    toks = batch["tokens"]
+    out_full = M.forward(params, cfg, batch, mode="train")
+    total = S + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    pre = dict(batch)
+    pre["tokens"] = toks[:, :S - 1]
+    out_pre = M.forward(params, cfg, pre, mode="prefill")
+    cache = M.init_cache(cfg, B, total, dtype=jnp.float32)
+    cache = seed_cache(cfg, cache, out_pre.cache, total - 1)
+    dec = M.forward(params, cfg,
+                    {"token": toks[:, S - 1:S], "cache": cache,
+                     "cache_index": jnp.int32(total - 1)}, mode="decode")
+    a = np.asarray(out_full.logits[:, -1], np.float32)
+    b = np.asarray(dec.logits[:, 0], np.float32)
+    err = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert err < 2e-2, err
+
+
+def test_long_context_applicability_matrix():
+    """DESIGN.md §4: long_500k runs exactly for mixtral (SWA), zamba2 and
+    falcon-mamba."""
+    runs = {a for a in ARCHS
+            if applicable(get_config(a), INPUT_SHAPES["long_500k"])}
+    assert runs == {"mixtral-8x22b", "zamba2-2.7b", "falcon-mamba-7b"}
+
+
+def test_param_counts_scale():
+    """Full-config analytic N sanity (order of magnitude vs public specs)."""
+    expect = {
+        "qwen3-moe-235b-a22b": (180e9, 300e9),
+        "mixtral-8x22b": (120e9, 180e9),
+        "nemotron-4-15b": (12e9, 18e9),
+        "llama3.2-1b": (0.9e9, 1.8e9),
+        "falcon-mamba-7b": (5e9, 9e9),
+        "olmo-1b": (0.9e9, 1.6e9),
+        # assignment spec (48L × 64e × d_ff 1408 + 2 shared + 163840 vocab)
+        # yields ~29B total / ~4.8B active — larger than the model-card name
+        # suggests; we implement the assigned numbers verbatim.
+        "moonshot-v1-16b-a3b": (20e9, 32e9),
+        "internvl2-1b": (0.4e9, 1.2e9),
+        "zamba2-2.7b": (2e9, 4e9),
+        "seamless-m4t-medium": (0.5e9, 2e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+    # MoE active < total
+    q = get_config("qwen3-moe-235b-a22b")
+    assert q.active_param_count() < 0.2 * q.param_count()

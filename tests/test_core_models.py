@@ -1,0 +1,95 @@
+"""curvefit / network / battery / mobility unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BatteryState, LinkModel, MobilityModel, WIFI_2_4GHZ,
+                        WIFI_5GHZ, available_power, data_rate,
+                        default_latency_curve, offload_latency,
+                        offload_pressure, paper_profiles, polyfit)
+from repro.core.curvefit import fit_profiles
+from repro.core.mobility import distance, latency_at, should_offload
+
+
+# --- curvefit ---------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(coeffs=st.lists(st.floats(-5, 5), min_size=3, max_size=3))
+def test_polyfit_recovers_exact_quadratic(coeffs):
+    x = np.linspace(0, 1, 12)
+    y = np.polyval(coeffs, x)
+    fit = polyfit(x, y, 2)
+    np.testing.assert_allclose(np.polyval(np.asarray(fit.coeffs), x), y,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_paper_fit_quality():
+    """Paper: adjusted R² of 0.976 / 0.989 for the quadratic fits."""
+    m = fit_profiles(*paper_profiles())
+    assert m.T1.r2 > 0.95 and m.T2.r2 > 0.95
+    assert m.M1.r2 > 0.95 and m.M2.r2 > 0.90
+
+
+# --- network ----------------------------------------------------------------
+def test_shannon_hartley_band_ordering():
+    """Fig 3a: the 5 GHz (80 MHz) band gives lower latency than 2.4 GHz."""
+    lat24 = float(offload_latency(WIFI_2_4GHZ, 1e6, 5.0))
+    lat5 = float(offload_latency(WIFI_5GHZ, 1e6, 5.0))
+    assert lat5 < lat24
+
+
+@settings(max_examples=25, deadline=None)
+@given(d1=st.floats(1.0, 20.0), d2=st.floats(1.0, 20.0),
+       p1=st.floats(1e3, 1e7), p2=st.floats(1e3, 1e7))
+def test_latency_monotonicity(d1, d2, p1, p2):
+    lo_d, hi_d = sorted((d1, d2))
+    lo_p, hi_p = sorted((p1, p2))
+    l = lambda p, d: float(offload_latency(WIFI_2_4GHZ, p, d))
+    assert l(lo_p, hi_d) >= l(lo_p, lo_d) - 1e-9   # farther => slower
+    assert l(hi_p, lo_d) >= l(lo_p, lo_d) - 1e-9   # bigger => slower
+
+
+def test_ici_mode_deterministic():
+    ici = LinkModel(bandwidth_hz=50e9, is_ici=True, congestion=0.5)
+    assert float(data_rate(ici, 1.0)) == float(data_rate(ici, 100.0)) == 25e9
+
+
+# --- battery ----------------------------------------------------------------
+def test_available_power_decreases_with_drive_time():
+    b = BatteryState()
+    p1 = float(available_power(b, 60.0, 60.0))
+    p2 = float(available_power(b, 60.0, 600.0))
+    assert p2 < p1
+
+
+def test_offload_pressure_bounds():
+    b = BatteryState()
+    for t in (10.0, 100.0, 1000.0):
+        p = float(offload_pressure(b, 60.0, t, power_threshold_w=8.0))
+        assert 0.0 <= p <= 1.0
+
+
+def test_pressure_rises_as_budget_collapses():
+    b = BatteryState()
+    p_fresh = float(offload_pressure(b, 30.0, 30.0, 8.0))
+    p_drained = float(offload_pressure(b, 600.0, 1200.0, 8.0))
+    assert p_drained >= p_fresh
+
+
+# --- mobility ---------------------------------------------------------------
+def test_distance_model():
+    mob = MobilityModel(v_primary=1.0, v_auxiliary=3.0)
+    assert float(distance(mob, 5.0)) == 20.0
+
+
+def test_latency_curve_anchors():
+    """Fitted on the paper's measurements: ~26 m => ~13.9 s."""
+    curve = default_latency_curve()
+    assert 11.0 < float(curve(26.0)) < 16.0
+    assert float(curve(4.0)) < 3.0
+
+
+def test_beta_threshold_stops_offload():
+    curve = default_latency_curve()
+    mob = MobilityModel(beta=10.0)
+    assert bool(should_offload(curve, mob, 0.5))     # 2 m apart
+    assert not bool(should_offload(curve, mob, 8.0))  # 32 m apart

@@ -1,0 +1,54 @@
+"""Frame/token-level compression (paper §VI) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masking import (CompressionReport, compress_tokens,
+                                compression_report, image_mask_savings,
+                                make_mask, norm_scores)
+
+
+def test_make_mask_keep_rate():
+    scores = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
+    for rate in (0.1, 0.3, 0.72):
+        m = make_mask(scores, rate)
+        got = float(m.mean())
+        assert abs(got - rate) < 0.05
+
+
+def test_compress_tokens_pallas_and_ref_agree():
+    toks = jax.random.normal(jax.random.PRNGKey(0), (2, 128, 64))
+    mask = make_mask(norm_scores(toks), 0.3)
+    o1, i1, c1 = compress_tokens(toks, mask, capacity=64, use_pallas=False)
+    o2, i2, c2 = compress_tokens(toks, mask, capacity=64, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(rate=st.floats(0.1, 0.9))
+def test_bandwidth_saving_tracks_keep_rate(rate):
+    mask = jax.random.bernoulli(jax.random.PRNGKey(3), rate, (4, 512))
+    rep = compression_report(mask, capacity=512, d_model=64)
+    # saving ≈ 1 - keep_rate (minus the small index overhead)
+    assert abs(rep.bandwidth_saving - (1.0 - rep.keep_rate)) < 0.15
+
+
+def test_paper_section6_numbers():
+    """§VI: ~28% bandwidth saving, ~13% compute saving, 3-4 ms detector.
+    Object fraction ~0.55 mean on the Gazebo-style scene mix."""
+    rng = np.random.default_rng(0)
+    frac = np.clip(rng.normal(0.54, 0.1, 3100), 0.1, 0.95)
+    bw, comp, det_ms = image_mask_savings(frac)
+    assert 0.2 < bw < 0.36          # paper: 28%
+    assert 0.08 < comp < 0.18       # paper: 13%
+    assert 3.0 <= det_ms <= 4.0
+
+
+def test_capacity_bounds_payload():
+    toks = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 32))
+    mask = jnp.ones((2, 256), bool)
+    out, idx, cnt = compress_tokens(toks, mask, capacity=64)
+    assert out.shape == (2, 64, 32)
+    assert (np.asarray(cnt) == 64).all()
