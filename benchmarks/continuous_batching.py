@@ -1,0 +1,146 @@
+"""Continuous vs static batching throughput on mixed-length requests.
+
+Static batching drains the stream in fixed batches and every batch decodes
+until its SLOWEST request finishes; the slot-based continuous runtime
+admits/evicts per step, so short requests free capacity immediately.
+Reproduction targets:
+
+  * continuous tokens/s >= static tokens/s on the mixed stream, at every
+    split ratio in the sweep (the architectural claim of this runtime),
+  * the async OffloadEngine reports a MEASURED overlapped makespan
+    (t_parallel_s > 0) — both node groups dispatched before either await.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+import repro.core as C
+from benchmarks.common import emit
+from repro.configs.base import get_config, reduced
+from repro.models import model as M
+from repro.serving.engine import (ContinuousServingEngine, ServeRequest,
+                                  ServingEngine)
+
+SLOTS = 2           # queue depth must exceed slots for admit/evict to matter:
+                    # the smallest share below (4 reqs at r=0.75) is 2 waves
+PROMPT = 8
+N_REQ = 16
+MAX_LEN = 40
+TRIALS = 5          # min-of-N walls: scheduling noise on shared hosts only
+                    # ever inflates a wall, so the min is the cleanest read
+
+
+def _requests(cfg, rng):
+    prompts = rng.integers(0, cfg.vocab_size, (N_REQ, PROMPT)).astype(np.int32)
+    # mixed completion lengths 2..24: every static batch of SLOTS contains
+    # a long request that the short ones must wait for
+    return [ServeRequest(uid=i, prompt=prompts[i], max_new=2 + (11 * i) % 23)
+            for i in range(N_REQ)]
+
+
+def _run_static(eng: ServingEngine, reqs) -> tuple:
+    """Batches of SLOTS, each padded to the batch-max completion length."""
+    toks = 0
+    wall = 0.0
+    for lo in range(0, len(reqs), SLOTS):
+        chunk = reqs[lo:lo + SLOTS]
+        prompts = np.stack([r.prompt for r in chunk])
+        mx = max(r.max_new for r in chunk)
+        t0 = time.perf_counter()
+        eng.generate(prompts, max_new=mx)
+        wall += time.perf_counter() - t0
+        toks += sum(r.max_new for r in chunk)   # only requested tokens count
+    return toks, wall
+
+
+def _run_continuous(eng: ContinuousServingEngine, reqs) -> tuple:
+    outs, st = eng.run(reqs)
+    assert sum(len(o.tokens) for o in outs) == sum(r.max_new for r in reqs)
+    return st.total_tokens, st.prefill_s + st.decode_s, st.decode_steps
+
+
+def _static_decode_steps(reqs) -> int:
+    """Decode invocations static batching needs: each chunk of SLOTS decodes
+    until its slowest request finishes (first token comes from prefill)."""
+    return sum(max(r.max_new for r in reqs[lo:lo + SLOTS]) - 1
+               for lo in range(0, len(reqs), SLOTS))
+
+
+def main(emit_fn=emit):
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    reqs = _requests(cfg, rng)
+
+    static_eng = ServingEngine(cfg, params, max_len=MAX_LEN)
+    cont_pri = ContinuousServingEngine(cfg, params, slots=SLOTS,
+                                       max_len=MAX_LEN)
+    cont_aux = ContinuousServingEngine(cfg, params, slots=SLOTS,
+                                       max_len=MAX_LEN, share_from=cont_pri)
+    # warm every compile path (B=SLOTS prefill/decode, B=1 prefill)
+    _run_static(static_eng, reqs[:SLOTS])
+    _run_continuous(cont_pri, reqs[:2])
+    _run_continuous(cont_aux, reqs[:2])
+
+    worst_ratio = float("inf")
+    pool_st_wall, pool_ct_wall, pool_toks = 0.0, 0.0, 0
+    # split points chosen so every static chunk is a full SLOTS-wide batch
+    # (16 -> 16 | 8+8 | 12+4): identical compile footprint on both sides
+    for r in (0.0, 0.5, 0.75):
+        n_off = int(round(r * len(reqs)))
+        shares = [s for s in (reqs[:n_off], reqs[n_off:]) if s]
+        st_walls, ct_walls = [], []
+        ct_steps = 0
+        toks = sum(q.max_new for q in reqs)
+        for _ in range(TRIALS):
+            st_walls.append(sum(_run_static(static_eng, s)[1] for s in shares))
+            trial = [_run_continuous(eng, share)
+                     for eng, share in zip((cont_aux, cont_pri), shares[-2:])]
+            ct_walls.append(sum(t[1] for t in trial))
+            ct_steps = sum(t[2] for t in trial)
+        st_steps = sum(_static_decode_steps(s) for s in shares)
+        # the structural claim, deterministically: slots drain the mixed
+        # stream in strictly fewer decode invocations than static batches
+        assert ct_steps < st_steps, (ct_steps, st_steps)
+        st_wall = float(np.min(st_walls))
+        ct_wall = float(np.min(ct_walls))
+        st_tps = toks / max(st_wall, 1e-9)
+        ct_tps = toks / max(ct_wall, 1e-9)
+        worst_ratio = min(worst_ratio, ct_tps / max(st_tps, 1e-9))
+        pool_st_wall += st_wall
+        pool_ct_wall += ct_wall
+        pool_toks += toks
+        emit_fn(f"continuous.r{r:.2f}.static_tok_s", st_wall * 1e6, f"{st_tps:.1f}")
+        emit_fn(f"continuous.r{r:.2f}.continuous_tok_s", ct_wall * 1e6, f"{ct_tps:.1f}")
+        emit_fn(f"continuous.r{r:.2f}.decode_steps", 0.0, f"{ct_steps}v{st_steps}")
+    speedup = pool_st_wall / max(pool_ct_wall, 1e-9)   # same tokens both arms
+    emit_fn("continuous.speedup_pooled", 0.0, f"{speedup:.2f}")
+    emit_fn("continuous.speedup_worst_r", 0.0, f"{worst_ratio:.2f}")
+    # wall-clock gates stay loose: CI runners are noisy shared hosts; the
+    # step-count assert above is the deterministic regression tripwire
+    assert speedup >= 0.9, \
+        f"continuous batching slower than static: {speedup:.2f}x"
+
+    # --- measured overlapped dispatch (async OffloadEngine) -------------
+    def fwd(batch):
+        return M.forward(params, cfg, batch, mode="train").logits
+
+    dev = jax.devices()[0]
+    eng = C.OffloadEngine(fwd,
+                          C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                          C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                          C.WIFI_5GHZ, payload_bytes_per_item=60e3)
+    batch = {"tokens": np.ones((10, 16), np.int32)}
+    eng.run(batch, 0.7)                      # compile both groups
+    rep = eng.run(batch, 0.7)
+    assert rep.t_parallel_s > 0.0, "t_parallel must be measured, not derived"
+    emit_fn("continuous.offload_t_parallel_ms", 0.0,
+            f"{rep.t_parallel * 1e3:.2f}")
+    return worst_ratio
+
+
+if __name__ == "__main__":
+    main()

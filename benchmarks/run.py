@@ -11,10 +11,10 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fig3_network, fig5_solver, fig6_mobility,
-                        fig7_power_memory, hetero_tpu, masking_savings,
-                        roofline, serving_bench, table1_profiling,
-                        table3_static, table4_multimodel)
+from benchmarks import (continuous_batching, fig3_network, fig5_solver,
+                        fig6_mobility, fig7_power_memory, hetero_tpu,
+                        masking_savings, roofline, serving_bench,
+                        table1_profiling, table3_static, table4_multimodel)
 
 MODULES = [
     ("table1", table1_profiling),
@@ -26,6 +26,7 @@ MODULES = [
     ("fig7", fig7_power_memory),
     ("masking", masking_savings),
     ("serving", serving_bench),
+    ("continuous", continuous_batching),
     ("roofline", roofline),
     ("hetero_tpu", hetero_tpu),
 ]

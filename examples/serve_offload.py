@@ -7,7 +7,9 @@ Serves a small (reduced-config) model against a Poisson request stream:
   2. fit + solve for the split ratio,
   3. compress the offload payload with the masked_compact kernel (§VI),
   4. run the request batches through the OffloadEngine and report latency
-     at r ∈ {0, r*, 1} — the Table-III experiment on live hardware.
+     at r ∈ {0, r*, 1} — the Table-III experiment on live hardware,
+  5. drain the same stream through the continuous-batching runtime with
+     the online SplitRatioController re-solving r from live timings.
 """
 import argparse
 import time
@@ -20,6 +22,7 @@ import repro.core as C
 from repro.configs.base import get_config, reduced
 from repro.core.masking import compression_report, make_mask, norm_scores
 from repro.data.pipeline import request_stream
+from repro.launch.serve import serve_continuous
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
 
@@ -95,7 +98,15 @@ def main():
         print(f"r={r:4.2f}  local={out.n_local:3d} offloaded={out.n_offloaded:3d}  "
               f"T_serial={out.t_serial:6.2f}s  T_parallel={out.t_parallel:6.2f}s  "
               f"(wall {wall:.2f}s, link {out.t_offload_s * 1e3:.1f}ms)")
-    print("done — outputs shape:", out.outputs.shape)
+    print("outputs shape:", out.outputs.shape)
+
+    # ---- 5. continuous-batching runtime + online controller -------------
+    # mixed completion lengths (2..8) are what the slot runtime absorbs;
+    # the shared wave-dispatch loop lives in repro.launch.serve
+    for r in reqs:
+        r.max_new_tokens = 2 + (r.uid % 7)
+    serve_continuous(cfg, params, reqs, prompt_len=P, max_new=8, slots=4,
+                     split="auto")
 
 
 if __name__ == "__main__":

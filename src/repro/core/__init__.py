@@ -23,7 +23,8 @@ from repro.core.offload import (NodeGroup, OffloadEngine, OffloadReport,
 from repro.core.profiler import (DeviceProfile, JETSON_NANO, JETSON_XAVIER,
                                  MeasuredProfile, WorkloadCost,
                                  analytic_profile, paper_profiles)
-from repro.core.scheduler import (OffloadDecision, SchedulerConfig,
+from repro.core.scheduler import (ControllerConfig, OffloadDecision,
+                                  SchedulerConfig, SplitRatioController,
                                   TaskScheduler)
 from repro.core.solver import (SolverConstraints, SolverResult, objective,
                                solve_split_ratio, solve_star)

@@ -13,12 +13,18 @@ Ties the pieces together per decision epoch:
 The scheduler is deliberately stateful-but-small: profiles are EMA-updated
 from observed execution, matching the paper's "continuously monitor system
 variables" loop.
+
+``SplitRatioController`` is the online feedback half of that loop for the
+serving runtime: it consumes measured ``OffloadReport`` timings (true
+overlapped makespans from the async OffloadEngine), EWMA-smooths per-item
+execution rates, and re-solves Eq. 4 every N steps so the split ratio
+tracks load shifts on either node group.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -125,3 +131,105 @@ class TaskScheduler:
                                   "solved", res)
         self.history.append(dec)
         return dec
+
+
+# ---------------------------------------------------------------------------
+# Online split-ratio controller for the serving runtime
+# ---------------------------------------------------------------------------
+@dataclass
+class ControllerConfig:
+    update_every: int = 4        # re-solve Eq. 4 every N observed batches
+    ema: float = 0.3             # smoothing on per-item execution rates
+    r_init: float = 0.5
+    r_min: float = 0.0
+    r_max: float = 1.0
+    deadline_slack: float = 4.0  # keep C1 loose: live timings drive r, not τ
+    explore: float = 0.05        # never route a group fully dark: without a
+                                 # trickle of work its EWMA rate freezes and
+                                 # the controller can't see it recover
+
+
+class SplitRatioController:
+    """Closed-loop split-ratio tuning from live OffloadReport timings.
+
+    Each ``observe(report)`` folds the report's measured per-item rates
+    (local s/item, remote s/item, link s/item) into EWMAs; every
+    ``update_every`` observations the controller synthesizes fresh
+    (r, T, P, M) profiles from those rates, refits the Eq. 1-3 curves and
+    re-solves Eq. 4.  ``r`` is the ratio the dispatcher should use next.
+    """
+
+    def __init__(self, cfg: Optional[ControllerConfig] = None,
+                 constraints: Optional[SolverConstraints] = None):
+        self.cfg = cfg or ControllerConfig()
+        self.constraints = constraints
+        self.rate_local: Optional[float] = None    # s per item, primary
+        self.rate_remote: Optional[float] = None   # s per item, auxiliary
+        self.rate_link: Optional[float] = None     # s per item on the link
+        self._r = self._clip(self.cfg.r_init)
+        self._seen = 0
+        self._batch = 0
+        self.history: List[SolverResult] = []
+
+    @property
+    def r(self) -> float:
+        return self._r
+
+    def _clip(self, r: float) -> float:
+        """Solver output clipped to [r_min, r_max], then held away from the
+        0/1 extremes by the exploration margin so both groups keep seeing
+        (and timing) real work."""
+        e = self.cfg.explore
+        lo = max(self.cfg.r_min, e)
+        hi = min(self.cfg.r_max, 1.0 - e)
+        return float(np.clip(r, lo, max(lo, hi)))
+
+    def split(self, n: int) -> int:
+        """Number of items (of n) to offload at the current ratio — at least
+        one per group when exploration is on and n allows it."""
+        n_off = int(round(self._r * n))
+        if self.cfg.explore > 0.0 and n >= 2:
+            n_off = min(max(n_off, 1), n - 1)
+        return n_off
+
+    def _ema(self, old: Optional[float], new: float) -> float:
+        a = self.cfg.ema
+        return new if old is None else (1 - a) * old + a * new
+
+    def observe(self, report) -> float:
+        """Fold one measured batch into the EWMAs; returns the (possibly
+        re-solved) split ratio to use for the next batch."""
+        if report.n_local:
+            self.rate_local = self._ema(self.rate_local,
+                                        report.t_local_s / report.n_local)
+        if report.n_offloaded:
+            self.rate_remote = self._ema(self.rate_remote,
+                                         report.t_remote_s / report.n_offloaded)
+            self.rate_link = self._ema(self.rate_link,
+                                       report.t_offload_s / report.n_offloaded)
+        self._batch = max(self._batch, report.n_local + report.n_offloaded)
+        self._seen += 1
+        if self._seen % self.cfg.update_every == 0 and \
+                self.rate_local is not None and self.rate_remote is not None:
+            self._resolve()
+        return self._r
+
+    def _resolve(self):
+        B = max(self._batch, 1)
+        loc, rem = self.rate_local, self.rate_remote
+        link = self.rate_link or 0.0
+        aux = MeasuredProfile("aux-live")
+        pri = MeasuredProfile("pri-live")
+        off = MeasuredProfile("off-live")
+        for r in (0.0, 0.25, 0.5, 0.75, 1.0):
+            aux.add(r, rem * r * B, 1.0, 50.0 * r)
+            pri.add(r, loc * (1 - r) * B, 1.0, 50.0 * (1 - r))
+            off.add(r, link * r * B, 0.0, 0.0)
+        cons = self.constraints or SolverConstraints(
+            tau=loc * B, k_devices=1,
+            deadline_slack=self.cfg.deadline_slack)
+        cons = dataclasses.replace(cons, r_min=max(cons.r_min, self.cfg.r_min))
+        res = solve_split_ratio(fit_profiles(aux, pri, off), cons)
+        self.history.append(res)
+        if res.feasible:
+            self._r = self._clip(res.r_opt)

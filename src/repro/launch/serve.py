@@ -1,13 +1,21 @@
 """Distributed serving launcher with HeteroEdge collaborative offloading.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto]
+        --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto] \
+        [--continuous] [--slots 4]
 
 Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
 loop: profile a calibration batch, fit, solve for r*, then split every
 arriving batch between the primary and auxiliary node groups (halves of
 the device set; on 1 device both groups share it — the decision logic and
 accounting are identical).
+
+``--continuous`` swaps the static per-batch engine for the slot-based
+continuous-batching runtime: requests stream through fixed KV-cache slots
+on each node group, the queue is split by the live ratio from
+``SplitRatioController`` (EWMA-smoothed measured timings re-solved into
+Eq. 4 every few waves), and mixed-length requests no longer serialize on
+the slowest member of their batch.
 """
 from __future__ import annotations
 
@@ -22,7 +30,79 @@ import repro.core as C
 from repro.configs.base import get_config, list_configs, reduced
 from repro.data.pipeline import request_stream
 from repro.models import model as M
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import (ContinuousServingEngine, ServeRequest,
+                                  ServingEngine)
+
+
+def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
+                     slots: int, split: str, link=None) -> None:
+    """Continuous-batching collaborative serving over a request stream.
+
+    Requests arrive in waves of ``2*slots``; each wave is split between the
+    auxiliary (offloaded share r) and primary node groups, both slot
+    runtimes drain their share, and the measured wave timings feed the
+    online controller that re-solves the split ratio for the next wave.
+    """
+    link = link or C.WIFI_5GHZ
+    offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    max_len = prompt_len + offset + max_new + 8
+    pri_eng = ContinuousServingEngine(cfg, params, slots=slots,
+                                      max_len=max_len)
+    aux_eng = ContinuousServingEngine(cfg, params, slots=slots,
+                                      max_len=max_len, share_from=pri_eng)
+    ctl = C.SplitRatioController(C.ControllerConfig(update_every=2))
+    fixed_r = None if split == "auto" else float(np.clip(float(split), 0.0, 1.0))
+    payload_item = prompt_len * cfg.d_model * 2
+
+    # each request keeps its own completion length (capped at --max-new) —
+    # mixed lengths are exactly what the slot runtime absorbs
+    requests = [ServeRequest(uid=r.uid, prompt=np.pad(
+                    r.prompt[:prompt_len],
+                    (0, max(0, prompt_len - len(r.prompt)))).astype(np.int32),
+                    max_new=max(1, min(r.max_new_tokens, max_new)),
+                    frontend=r.frontend)
+                for r in reqs]
+    # warm both runtimes so wave timings measure steady-state serving
+    pri_eng.run(requests[:1])
+    aux_eng.run(requests[:1])
+
+    wave = 2 * slots
+    done = 0
+    t_start = time.perf_counter()
+    total_tokens = 0
+    while done < len(requests):
+        chunk = requests[done:done + wave]
+        done += len(chunk)
+        if fixed_r is not None:
+            r = fixed_r
+            n_off = int(round(r * len(chunk)))
+        else:
+            r = ctl.r
+            n_off = ctl.split(len(chunk))  # keeps both groups observable
+        aux_share, pri_share = chunk[:n_off], chunk[n_off:]
+        t0 = time.perf_counter()
+        st_a = aux_eng.run(aux_share)[1] if aux_share else None
+        st_p = pri_eng.run(pri_share)[1] if pri_share else None
+        wall = time.perf_counter() - t0
+        toks = sum(s.total_tokens for s in (st_a, st_p) if s)
+        total_tokens += toks
+        t_off = float(C.offload_latency(link, n_off * payload_item, 1.0)) \
+            if n_off else 0.0
+        rep = C.OffloadReport(
+            r=r, n_local=len(pri_share), n_offloaded=len(aux_share),
+            t_local_s=st_p.prefill_s + st_p.decode_s if st_p else 0.0,
+            t_remote_s=st_a.prefill_s + st_a.decode_s if st_a else 0.0,
+            t_offload_s=t_off, payload_bytes=n_off * payload_item,
+            e_offload_j=0.0)
+        if fixed_r is None:
+            ctl.observe(rep)
+        print(f"wave: {len(chunk):2d} reqs r={r:.2f} "
+              f"local={len(pri_share)} offloaded={len(aux_share)} "
+              f"{toks} toks in {wall:.2f}s ({toks / max(wall, 1e-9):.1f} tok/s)")
+    wall = time.perf_counter() - t_start
+    print(f"continuous: {len(requests)} requests, {total_tokens} tokens in "
+          f"{wall:.2f}s ({total_tokens / max(wall, 1e-9):.1f} tok/s), "
+          f"final r={fixed_r if fixed_r is not None else ctl.r:.2f}")
 
 
 def main():
@@ -35,6 +115,10 @@ def main():
     ap.add_argument("--kv-int8", action="store_true")
     ap.add_argument("--split", default="auto",
                     help='"auto" (HeteroEdge solver), a float r, or "none"')
+    ap.add_argument("--continuous", action="store_true",
+                    help="slot-based continuous batching runtime")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-cache slots per node group (continuous mode)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -51,6 +135,12 @@ def main():
                           seed=0, frontend_tokens=cfg.frontend_tokens,
                           frontend_dim=(cfg.frontend_dim or cfg.d_model)
                           if cfg.frontend else 0)
+    if args.continuous:
+        serve_continuous(cfg, params, reqs, prompt_len=P,
+                         max_new=args.max_new, slots=args.slots,
+                         split=args.split if args.split != "none" else "0.0")
+        return
+
     prompts = np.stack([np.pad(r.prompt[:P], (0, max(0, P - len(r.prompt))))
                         for r in reqs]).astype(np.int32)
     batch = {"tokens": prompts}

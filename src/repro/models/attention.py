@@ -157,10 +157,13 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len, *, window: int):
     s = jnp.einsum("bhgd,bkhd->bhgk", qf,
                    k_cache.astype(jnp.float32)) * scale
     pos = jnp.arange(S)
-    mask = pos < cache_len
+    # cache_len: scalar, or per-slot lengths [B] (continuous batching) —
+    # a [1]-shaped scalar broadcasts over the batch dim identically
+    cl = jnp.atleast_1d(jnp.asarray(cache_len))
+    mask = pos[None, :] < cl[:, None]
     if window:
-        mask &= pos >= (cache_len - window)
-    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        mask &= pos[None, :] >= (cl[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
     return out.reshape(B, 1, H, dh).astype(v_cache.dtype)
@@ -192,6 +195,20 @@ def cache_update(cache, new, index):
     import numpy as _np
 
     mesh = active_mesh()
+    if jnp.ndim(index):
+        # per-slot write positions [B] (continuous batching): each batch row
+        # lands at its own sequence index — vmap the single-row update.
+        # Only valid off-mesh: under a sequence-sharded cache this vmap
+        # would re-trigger the whole-cache replication the shard_map path
+        # below exists to avoid, so fail loudly instead of silently.
+        if mesh is not None and "model" in mesh.shape:
+            raise NotImplementedError(
+                "per-slot cache indices are not supported with a sharded "
+                "KV cache yet — run continuous batching off-mesh")
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                c, n.astype(c.dtype), i, axis=0))(cache, new, index)
+
     B, S, Hkv, dh = cache.shape
     if mesh is None or "model" not in mesh.shape:
         return jax.lax.dynamic_update_slice_in_dim(cache, new, index, axis=1)
@@ -226,7 +243,8 @@ def cache_update(cache, new, index):
                                                   local, axis=1)
         return jnp.where(mine, upd, c)
 
-    return jax.shard_map(
+    from repro.models.sharding import shard_map_compat
+    return shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(bspec, sspec, hspec, None),
                   P(bspec, None, hspec, None), P()),
@@ -285,7 +303,9 @@ def attn_apply(params, x, cfg, *, positions, mode: str,
         return y, new_cache
     k_cache = cache_update(cache["k"], k.astype(cache["k"].dtype), cache_index)
     v_cache = cache_update(cache["v"], v.astype(cache["v"].dtype), cache_index)
-    if use_pallas:
+    # the Pallas decode kernel takes a scalar cache length; per-slot
+    # (vector) indices route through the reference path
+    if use_pallas and jnp.ndim(cache_index) == 0:
         from repro.kernels.ops import decode_attention as _dec
         out = _dec(q, k_cache, v_cache, cache_index + 1, window=cfg.sliding_window)
     else:

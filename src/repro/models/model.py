@@ -171,7 +171,10 @@ def forward(params, cfg, batch, *, mode: str = "train", remat: bool = False,
     assert mode == "decode"
     token, cache, idx = batch["token"], batch["cache"], batch["cache_index"]
     x = embed_apply(params["embed"], token)
-    positions = jnp.full((1,), idx, jnp.int32)
+    if jnp.ndim(idx):  # per-slot cache indices [B] (continuous batching)
+        positions = jnp.asarray(idx, jnp.int32)[:, None]
+    else:
+        positions = jnp.full((1,), idx, jnp.int32)
     if kind == "hybrid":
         x, caches, aux = tfm.hybrid_apply(
             params["blocks"], x, cfg, mode="decode", positions=positions,

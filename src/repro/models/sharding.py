@@ -38,6 +38,18 @@ def active_mesh():
     return _STATE["mesh"]
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """`jax.shard_map` moved out of jax.experimental over several releases
+    and renamed `check_rep` -> `check_vma` on the way; dispatch to whichever
+    this jax provides so pinned CI (0.4.x) and newer toolchains both work."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 def constrain(x, *logical):
     """Apply a sharding constraint described by logical axis names."""
     mesh = _STATE["mesh"]

@@ -6,12 +6,21 @@ ONE new token against a seq_len cache).  ``ServingEngine`` wraps them into
 a batched greedy-decoding loop and plugs into the HeteroEdge
 ``OffloadEngine`` as the task function for the collaborative-serving
 examples.
+
+``ContinuousServingEngine`` is the slot-based continuous-batching runtime:
+a request queue feeds a fixed number of KV-cache slots; each decode step
+advances every occupied slot with per-slot cache indices (vector
+``cache_index`` through the model's decode path), finished requests are
+evicted and their slots immediately re-admitted from the queue.  Static
+batching is throughput-bound by the slowest request of the batch; slots
+are not.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,10 +49,11 @@ def make_serve_step(cfg, *, use_pallas: bool = False):
 
 
 # ---------------------------------------------------------------------------
-def seed_cache(cfg, big_cache, prefill_cache, prefill_len: int):
-    """Copy prefill caches (length P buffers) into full-size decode buffers."""
-    kind = M._kind(cfg)
-
+def _merge_cache(cfg, big_cache, prefill_cache, upd):
+    """Walk the decode-cache tree, applying ``upd(dst_leaf, src_leaf)`` at
+    every leaf and quantizing bf16 prefill K/V into int8 destinations on the
+    way.  Shared by full-batch seeding (seed_cache) and per-slot admission
+    (write_slot_cache) — only the leaf update differs."""
     def copy_kv(dst, src):
         if "self" in dst:  # unwrap {"self": ...} wrappers (hybrid shared)
             return {key: copy_kv(dst[key], src[key]) for key in dst}
@@ -53,27 +63,35 @@ def seed_cache(cfg, big_cache, prefill_cache, prefill_len: int):
             out = {}
             for name in ("k", "v"):
                 qt, sc = quantize_kv(src[name])
-                out[name] = jax.lax.dynamic_update_slice_in_dim(
-                    dst[name], qt, 0, axis=2)
-                out[name + "_scale"] = jax.lax.dynamic_update_slice_in_dim(
-                    dst[name + "_scale"], sc, 0, axis=2)
+                out[name] = upd(dst[name], qt)
+                out[name + "_scale"] = upd(dst[name + "_scale"], sc)
             return out
-        return jax.tree.map(
-            lambda d, s: jax.lax.dynamic_update_slice_in_dim(
-                d, s.astype(d.dtype), 0, axis=2), dst, src)
+        return jax.tree.map(upd, dst, src)
 
+    kind = M._kind(cfg)
     if kind == "ssm":
-        return jax.tree.map(lambda d, s: s.astype(d.dtype), big_cache, prefill_cache)
+        return jax.tree.map(upd, big_cache, prefill_cache)
     if kind == "hybrid":
-        return {"backbone": jax.tree.map(lambda d, s: s.astype(d.dtype),
-                                         big_cache["backbone"],
+        return {"backbone": jax.tree.map(upd, big_cache["backbone"],
                                          prefill_cache["backbone"]),
                 "shared": copy_kv(big_cache["shared"], prefill_cache["shared"])}
     out = {"self": copy_kv(big_cache["self"], prefill_cache["self"])}
     if "cross" in big_cache:
-        out["cross"] = jax.tree.map(lambda d, s: s.astype(d.dtype),
-                                    big_cache["cross"], prefill_cache["cross"])
+        out["cross"] = jax.tree.map(upd, big_cache["cross"],
+                                    prefill_cache["cross"])
     return out
+
+
+def seed_cache(cfg, big_cache, prefill_cache, prefill_len: int):
+    """Copy prefill caches (length P buffers) into full-size decode buffers.
+
+    The leaf update writes the (shorter) prefill buffer at sequence offset 0
+    of axis 2; for same-shape leaves (SSM states, cross K/V) that is a full
+    replace, so one update covers every cache family."""
+    def upd(d, s):
+        return jax.lax.dynamic_update_slice_in_dim(
+            d, s.astype(d.dtype), 0, axis=2)
+    return _merge_cache(cfg, big_cache, prefill_cache, upd)
 
 
 # ---------------------------------------------------------------------------
@@ -127,3 +145,199 @@ class ServingEngine:
         return GenerationResult(
             tokens=toks, prefill_s=t_prefill, decode_s=t_decode,
             tokens_per_s=B * max_new / max(t_decode + t_prefill, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+def write_slot_cache(cfg, big_cache, prefill_cache, slot):
+    """Write a B=1 prefill cache into slot `slot` of the big decode cache.
+
+    Every cache leaf is laid out [L, B, ...]; the prefill leaf is
+    [L, 1, P, ...] (or [L, 1, ...] for SSM states), so a single
+    dynamic_update_slice at (0, slot, 0, ...) seeds the slot.  Positions
+    beyond the prompt keep stale bytes from the slot's previous occupant —
+    the per-slot length mask in decode attention hides them.
+    """
+    def upd(dst, src):
+        start = (jnp.int32(0), jnp.asarray(slot, jnp.int32)) \
+            + (jnp.int32(0),) * (dst.ndim - 2)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    return _merge_cache(cfg, big_cache, prefill_cache, upd)
+
+
+@dataclass
+class ServeRequest:
+    """One unit of work for the continuous-batching queue."""
+    uid: int
+    prompt: np.ndarray                 # [P] int32 (padded to the engine's P)
+    max_new: int
+    frontend: Optional[np.ndarray] = None
+
+
+@dataclass
+class RequestOutput:
+    uid: int
+    tokens: np.ndarray                 # [n_generated] int32
+    admitted_step: int
+    finished_step: int
+
+
+@dataclass
+class ContinuousStats:
+    requests: int
+    total_tokens: int
+    decode_steps: int
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+    occupancy: float                   # mean fraction of busy slots per step
+
+
+@dataclass
+class _Slot:
+    uid: int = -1
+    remaining: int = 0
+    tokens: List[int] = field(default_factory=list)
+    admitted_step: int = 0
+
+    @property
+    def busy(self) -> bool:
+        return self.uid >= 0
+
+
+class ContinuousServingEngine:
+    """Slot-based continuous batching with greedy decoding.
+
+    Fixed `slots`-wide decode batch; requests are admitted into free slots
+    (B=1 prefill written into the slot's cache region), every decode step
+    advances all slots with per-slot cache indices, and requests are
+    evicted the step they emit their last token (eos or max_new), freeing
+    the slot for the next queued request.  Token streams are bit-identical
+    to static batching because each slot attends only to its own
+    positions 0..len-1 (per-slot length masks).
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
+                 use_pallas: bool = False, eos_id: Optional[int] = None,
+                 share_from: Optional["ContinuousServingEngine"] = None):
+        """`share_from`: another engine over the SAME cfg whose jitted
+        prefill/step/slot-write programs this one reuses — jax.jit caches
+        per function object, so sibling node-group engines would otherwise
+        recompile byte-identical programs."""
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+        if share_from is not None and share_from.cfg is cfg:
+            self.prefill = share_from.prefill
+            self.step = share_from.step
+            self._write_slot = share_from._write_slot
+        else:
+            self.prefill = jax.jit(make_prefill_step(cfg, use_pallas=use_pallas))
+            self.step = jax.jit(make_serve_step(cfg, use_pallas=use_pallas))
+            self._write_slot = jax.jit(
+                lambda big, pre, slot: write_slot_cache(cfg, big, pre, slot))
+        self._offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
+
+    # ------------------------------------------------------------------
+    def _admit_free_slots(self, pending, slot_states, cache, lengths,
+                          cur_tok, step_no: int):
+        """Admit queued requests into every free slot.  Two phases so the
+        B=1 prefills overlap: dispatch ALL prefills + slot writes first
+        (JAX async dispatch), materialize the first tokens after."""
+        admitted = []
+        for slot, s in enumerate(slot_states):
+            if not s.busy and pending:
+                req = pending.popleft()
+                batch = {"tokens": jnp.asarray(req.prompt[None])}
+                if req.frontend is not None:
+                    batch["frontend"] = jnp.asarray(req.frontend[None])
+                last_logits, pre_cache = self.prefill(self.params, batch)
+                cache = self._write_slot(cache, pre_cache, slot)
+                admitted.append((slot, req, last_logits))
+        for slot, req, last_logits in admitted:
+            first = int(jnp.argmax(last_logits[0]))
+            lengths[slot] = len(req.prompt) + self._offset
+            cur_tok[slot] = first
+            slot_states[slot] = _Slot(uid=req.uid, remaining=req.max_new - 1,
+                                      tokens=[first], admitted_step=step_no)
+        return cache
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[ServeRequest]
+            ) -> Tuple[List[RequestOutput], ContinuousStats]:
+        cfg = self.cfg
+        if not requests:
+            return [], ContinuousStats(0, 0, 0, 0.0, 0.0, 0.0, 0.0)
+        P = len(requests[0].prompt)
+        assert all(len(r.prompt) == P for r in requests), \
+            "pad prompts to a common length before submission"
+        assert all(r.max_new >= 1 for r in requests)
+        assert P + self._offset + max(r.max_new for r in requests) \
+            <= self.max_len, "max_len too small for prompt + generation"
+
+        pending = deque(requests)
+        slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
+        lengths = np.zeros((self.slots,), np.int32)
+        cur_tok = np.zeros((self.slots,), np.int32)
+        cache = M.init_cache(cfg, self.slots, self.max_len,
+                             dtype=cfg.jnp_dtype)
+        outputs: List[RequestOutput] = []
+        step_no = 0
+        busy_acc = 0.0
+        t_prefill = t_decode = 0.0
+
+        def _finished(s: _Slot) -> bool:
+            return s.busy and (s.remaining <= 0
+                               or (self.eos_id is not None
+                                   and s.tokens[-1] == self.eos_id))
+
+        while pending or any(s.busy for s in slot_states):
+            # --- admit into every free slot --------------------------
+            t0 = time.perf_counter()
+            cache = self._admit_free_slots(pending, slot_states, cache,
+                                           lengths, cur_tok, step_no)
+            t_prefill += time.perf_counter() - t0
+
+            # --- evict completed slots (at admission or post-decode) --
+            freed = False
+            for i, s in enumerate(slot_states):
+                if _finished(s):
+                    outputs.append(RequestOutput(
+                        uid=s.uid, tokens=np.asarray(s.tokens, np.int32),
+                        admitted_step=s.admitted_step, finished_step=step_no))
+                    slot_states[i] = _Slot()
+                    lengths[i] = 0
+                    freed = True
+            if freed and pending:
+                continue  # refill freed slots before the next decode step
+            if not any(s.busy for s in slot_states):
+                break
+
+            # --- one decode step over all slots ----------------------
+            t0 = time.perf_counter()
+            tok = jnp.asarray(cur_tok)[:, None]
+            logits, cache = self.step(self.params, cache, tok,
+                                      jnp.asarray(lengths))
+            new_tok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            t_decode += time.perf_counter() - t0
+            step_no += 1
+            busy_acc += sum(s.busy for s in slot_states) / self.slots
+
+            for i, s in enumerate(slot_states):
+                if s.busy:
+                    s.tokens.append(int(new_tok[i]))
+                    s.remaining -= 1
+                    lengths[i] += 1
+                    cur_tok[i] = int(new_tok[i])
+
+        jax.block_until_ready(cache)
+        total_tokens = sum(len(o.tokens) for o in outputs)
+        wall = t_prefill + t_decode
+        stats = ContinuousStats(
+            requests=len(outputs), total_tokens=total_tokens,
+            decode_steps=step_no, prefill_s=t_prefill, decode_s=t_decode,
+            tokens_per_s=total_tokens / max(wall, 1e-9),
+            occupancy=busy_acc / max(step_no, 1))
+        outputs.sort(key=lambda o: o.uid)
+        return outputs, stats

@@ -1,7 +1,7 @@
 """curvefit / network / battery / mobility unit + property tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (BatteryState, LinkModel, MobilityModel, WIFI_2_4GHZ,
                         WIFI_5GHZ, available_power, data_rate,

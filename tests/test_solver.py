@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.curvefit import FittedModels, PolyFit, fit_profiles
 from repro.core.profiler import paper_profiles
