@@ -8,7 +8,10 @@ Reproduction targets:
   * continuous tokens/s >= static tokens/s on the mixed stream, at every
     split ratio in the sweep (the architectural claim of this runtime),
   * the async OffloadEngine reports a MEASURED overlapped makespan
-    (t_parallel_s > 0) — both node groups dispatched before either await.
+    (t_parallel_s > 0) — all node groups dispatched before any await,
+  * the HeteroRuntime session API (PR 2) drains the same stream through
+    the same slot engines with token streams BIT-IDENTICAL to driving the
+    engines directly, its metrics read from the structured telemetry.
 """
 from __future__ import annotations
 
@@ -139,6 +142,23 @@ def main(emit_fn=emit):
     assert rep.t_parallel_s > 0.0, "t_parallel must be measured, not derived"
     emit_fn("continuous.offload_t_parallel_ms", 0.0,
             f"{rep.t_parallel * 1e3:.2f}")
+
+    # --- HeteroRuntime session: same stream, same engines, one facade ----
+    topo = C.Topology.pair(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                           C.WIFI_5GHZ)
+    runtime = C.HeteroRuntime(topo, slots=SLOTS, max_len=MAX_LEN)
+    runtime.add_task(cfg.name, cfg, params)
+    result = runtime.serve(reqs, split=0.5)          # fixed r, like the sweep
+    tel = result.telemetry
+    session_outs = {o.uid: o.tokens for o in result.outputs[cfg.name]}
+    ref_outs, _ = cont_pri.run(reqs)                 # direct engine reference
+    for o in ref_outs:
+        np.testing.assert_array_equal(session_outs[o.uid], o.tokens)
+    assert tel["totals"]["tokens"] == sum(r.max_new for r in reqs)
+    emit_fn("continuous.runtime_pair_tok_s", 0.0,
+            f"{tel['totals']['tok_per_s']:.1f}")
+    emit_fn("continuous.runtime_pair_waves", 0.0, len(tel["waves"]))
     return worst_ratio
 
 

@@ -9,7 +9,9 @@ Serves a small (reduced-config) model against a Poisson request stream:
   4. run the request batches through the OffloadEngine and report latency
      at r ∈ {0, r*, 1} — the Table-III experiment on live hardware,
   5. drain the same stream through the continuous-batching runtime with
-     the online SplitRatioController re-solving r from live timings.
+     the online SplitRatioController re-solving r from live timings,
+  6. open a HeteroRuntime session on a 3-node star (§VIII) serving a mixed
+     two-task stream, the per-group split re-solved by solve_star.
 """
 import argparse
 import time
@@ -24,7 +26,7 @@ from repro.core.masking import compression_report, make_mask, norm_scores
 from repro.data.pipeline import request_stream
 from repro.launch.serve import serve_continuous
 from repro.models import model as M
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ServeRequest, ServingEngine
 
 
 def main():
@@ -102,11 +104,36 @@ def main():
 
     # ---- 5. continuous-batching runtime + online controller -------------
     # mixed completion lengths (2..8) are what the slot runtime absorbs;
-    # the shared wave-dispatch loop lives in repro.launch.serve
+    # the shared wave-dispatch loop lives in repro.core.topology
     for r in reqs:
         r.max_new_tokens = 2 + (r.uid % 7)
     serve_continuous(cfg, params, reqs, prompt_len=P, max_new=8, slots=4,
                      split="auto")
+
+    # ---- 6. HeteroRuntime session: star topology, two concurrent tasks --
+    # the paper's headline evaluation runs multiple DNNs at once; here two
+    # model instances share one session, interleaved over the same waves,
+    # with solve_star apportioning each wave across hub + 2 spokes
+    params_b = M.init_params(cfg, jax.random.PRNGKey(7))
+    topo = C.Topology.star(
+        C.NodeGroup("hub", [dev], C.JETSON_NANO),
+        [C.NodeGroup("spoke1", [dev], C.JETSON_XAVIER),
+         C.NodeGroup("spoke2", [dev], C.JETSON_XAVIER)],
+        C.WIFI_5GHZ)
+    runtime = C.HeteroRuntime(topo, slots=2, max_len=32)
+    runtime.add_task("vision-a", cfg, params, max_new=6)
+    runtime.add_task("vision-b", cfg, params_b, max_new=6)
+    session_reqs = [
+        ServeRequest(uid=i, prompt=prompts[i % len(prompts)],
+                     max_new=2 + i % 5,
+                     task="vision-a" if i % 2 == 0 else "vision-b")
+        for i in range(16)]
+    result = runtime.serve(session_reqs, verbose=True)
+    tot = result.telemetry["totals"]
+    print(f"star session: {tot['requests']} reqs over "
+          f"{len(result.telemetry['waves'])} waves, "
+          f"{tot['tokens']} toks ({tot['tok_per_s']:.1f} tok/s), "
+          f"final split={tot['final_split']}")
 
 
 if __name__ == "__main__":

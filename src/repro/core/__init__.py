@@ -10,6 +10,7 @@ battery    battery/charging constraints (Eqs. 5-6)
 mobility   distance-latency model + β threshold (§V-A.5)
 scheduler  online decision loop (Algorithm 1)
 offload    split execution across node groups
+topology   N-node topologies + the HeteroRuntime session facade (§VIII)
 masking    frame/token-level compression (§VI)
 """
 from repro.core.battery import BatteryState, available_power, offload_pressure
@@ -19,7 +20,8 @@ from repro.core.network import (DCN_LINK, ICI_LINK, WIFI_2_4GHZ, WIFI_5GHZ,
                                 LinkModel, data_rate, offload_energy,
                                 offload_latency)
 from repro.core.offload import (NodeGroup, OffloadEngine, OffloadReport,
-                                padded_quota_batch, split_sizes)
+                                mesh_axis_sizes, padded_quota_batch,
+                                split_counts, split_sizes)
 from repro.core.profiler import (DeviceProfile, JETSON_NANO, JETSON_XAVIER,
                                  MeasuredProfile, WorkloadCost,
                                  analytic_profile, paper_profiles)
@@ -28,3 +30,5 @@ from repro.core.scheduler import (ControllerConfig, OffloadDecision,
                                   TaskScheduler)
 from repro.core.solver import (SolverConstraints, SolverResult, objective,
                                solve_split_ratio, solve_star)
+from repro.core.topology import (HeteroRuntime, ServeResult, SplitVector,
+                                 TaskSpec, Topology, group_times_from_fits)

@@ -3,14 +3,17 @@
 The paper's runtime is two devices + MQTT: the primary keeps (1−r)·B of the
 batch, ships r·B to the auxiliary, both execute, results merge.  Here a
 *node group* is a set of JAX devices (a mesh sub-slice; on the production
-mesh: pod 0 = primary, pod 1 = auxiliary).  Two execution modes:
+mesh: pod 0 = primary, pod 1 = auxiliary).  Since PR 2 the engine runs over
+an arbitrary :class:`~repro.core.topology.Topology` (ordered node groups +
+per-edge links, group 0 = hub); the 2-node constructor survives as a thin
+shim so the paper-faithful call sites keep working.  Two execution modes:
 
-* ``run`` — dispatch-level split, faithful to the paper: one jitted program
-  per group over its own sub-mesh, asymmetric static batch split, simulated
-  link latency from the LinkModel (wall-clock measured on this host).
-  Both groups are dispatched asynchronously (JAX async dispatch) BEFORE
-  either is awaited, so ``OffloadReport.t_parallel`` is a *measured*
-  makespan of the overlapped execution, not a max() over serial timings.
+* ``run`` — dispatch-level split: one jitted program per group over its own
+  sub-mesh, asymmetric static batch split, simulated link latency from each
+  edge's LinkModel (wall-clock measured on this host).  ALL groups are
+  dispatched asynchronously (JAX async dispatch) BEFORE any is awaited, so
+  ``OffloadReport.t_parallel`` is a *measured* makespan of the overlapped
+  execution, not a max() over serial timings.
 * ``padded_step`` — single-XLA-program variant used by the multi-pod
   dry-run: batch laid out [n_groups, quota_max, ...] over the "pod" axis
   with per-group validity masks; proves the whole collaborative step
@@ -20,7 +23,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,47 +32,101 @@ from repro.core.network import LinkModel, offload_energy, offload_latency
 from repro.core.profiler import DeviceProfile
 
 
+def mesh_axis_sizes(n_devices: int, n_axes: int,
+                    axis_sizes: Optional[Sequence[int]] = None) -> Tuple[int, ...]:
+    """Factor ``n_devices`` into ``n_axes`` mesh-axis sizes, largest first.
+
+    An explicit ``axis_sizes`` is validated against the device count;
+    otherwise the factorization is balanced greedily — each axis takes the
+    smallest divisor of the remainder at or above the even split
+    rem^(1/axes_left), which keeps the factors descending — so 8 devices
+    over 2 axes give (4, 2), 4 give (2, 2), 12 over 3 give (3, 2, 2) and
+    a prime count degenerates to (n, 1, ...).
+    """
+    if axis_sizes is not None:
+        sizes = tuple(int(s) for s in axis_sizes)
+        if len(sizes) != n_axes:
+            raise ValueError(f"axis_sizes {sizes} has {len(sizes)} entries "
+                             f"for {n_axes} axes")
+        prod = 1
+        for s in sizes:
+            prod *= s
+        if prod != n_devices:
+            raise ValueError(f"axis_sizes {sizes} does not cover "
+                             f"{n_devices} devices")
+        return sizes
+    sizes = []
+    rem = n_devices
+    for axes_left in range(n_axes, 1, -1):
+        # smallest divisor of rem at or above the even split rem^(1/axes):
+        # keeps factors descending, e.g. 12 over 3 axes -> (3, 2, 2)
+        target = rem ** (1.0 / axes_left)
+        d = rem
+        for cand in range(1, rem + 1):
+            if rem % cand == 0 and cand >= target - 1e-9:
+                d = cand
+                break
+        sizes.append(d)
+        rem //= d
+    sizes.append(rem)
+    return tuple(sizes)
+
+
 @dataclass
 class NodeGroup:
     name: str
     devices: List[Any]
     profile: DeviceProfile
 
-    def mesh(self, axes=("data",)):
+    def mesh(self, axes=("data",), axis_sizes: Optional[Sequence[int]] = None):
         import numpy as _np
         devs = _np.array(self.devices)
         if len(axes) == 1:
             return jax.sharding.Mesh(devs, axes)
-        return jax.sharding.Mesh(devs.reshape(-1, len(self.devices) // 1), axes)
+        shape = mesh_axis_sizes(len(self.devices), len(axes), axis_sizes)
+        return jax.sharding.Mesh(devs.reshape(shape), axes)
 
 
 @dataclass
 class OffloadReport:
-    r: float
+    r: float                    # total offloaded fraction (1 − hub share)
     n_local: int
     n_offloaded: int
-    t_local_s: float            # local completion since joint dispatch
-    t_remote_s: float           # remote completion since joint dispatch
-    t_offload_s: float          # link latency (model-predicted)
+    t_local_s: float            # hub completion since joint dispatch
+    t_remote_s: float           # slowest spoke completion since joint dispatch
+    t_offload_s: float          # slowest spoke link latency (model-predicted)
     payload_bytes: float
     e_offload_j: float
     outputs: Any = None
     t_parallel_s: float = 0.0   # measured makespan of the overlapped dispatch
                                 # (0.0 when the task could not overlap, e.g.
                                 # host-loop jit=False tasks)
+    # --- N-group widening (PR 2), ordered like the topology: hub first ----
+    group_names: Tuple[str, ...] = ()
+    n_group: Tuple[int, ...] = ()
+    t_group_s: Tuple[float, ...] = ()   # per-group completion since dispatch
+    t_link_s: Tuple[float, ...] = ()    # per-edge link latency (hub entry 0.0)
 
     @property
     def t_parallel(self) -> float:
-        """Completion time with local/remote overlap.  Measured when the
-        engine dispatched both groups before awaiting either; otherwise
-        derived from the serial per-group timings."""
+        """Completion time with full overlap.  Measured when the engine
+        dispatched every group before awaiting any; otherwise derived from
+        the serial per-group timings."""
+        if self.t_group_s:
+            derived = max(tl + tg for tl, tg
+                          in zip(self.t_link_s, self.t_group_s))
+        else:
+            derived = max(self.t_local_s, self.t_offload_s + self.t_remote_s)
         if self.t_parallel_s > 0.0:
             return max(self.t_parallel_s, self.t_offload_s + self.t_remote_s)
-        return max(self.t_local_s, self.t_offload_s + self.t_remote_s)
+        return derived
 
     @property
     def t_serial(self) -> float:
-        """Paper-objective-style serial accounting: r(T1+T3) + (1-r)T2."""
+        """Paper-objective-style serial accounting: r(T1+T3) + (1-r)T2,
+        generalized to Σ_g (T_g + link_g)."""
+        if self.t_group_s:
+            return sum(self.t_group_s) + sum(self.t_link_s)
         return self.t_local_s + self.t_remote_s + self.t_offload_s
 
 
@@ -80,22 +137,91 @@ def split_sizes(batch: int, r: float) -> Tuple[int, int]:
     return n_off, batch - n_off
 
 
+def _as_fractions(split, n_groups: int) -> Tuple[float, ...]:
+    """Normalize a split spec — scalar r, sequence, or SplitVector — into
+    per-group fractions ordered hub first.  Raw sequences are projected
+    onto the simplex exactly like SplitVector.__post_init__, so a
+    non-normalized sequence can never over-allocate the batch."""
+    if hasattr(split, "fractions"):
+        fr = tuple(float(f) for f in split.fractions)
+    elif isinstance(split, (int, float)):
+        if n_groups != 2:
+            raise ValueError(
+                f"scalar split ratio is only defined for 2 groups; this "
+                f"topology has {n_groups} — pass a SplitVector")
+        fr = (1.0 - float(split), float(split))
+    else:
+        fr = tuple(max(0.0, float(f)) for f in split)
+        s = sum(fr)
+        if s <= 0.0:
+            raise ValueError(f"split fractions {fr} sum to zero")
+        fr = tuple(f / s for f in fr)
+    if len(fr) != n_groups:
+        raise ValueError(f"split has {len(fr)} fractions for "
+                         f"{n_groups} groups")
+    return fr
+
+
+def split_counts(fractions: Sequence[float], batch: int) -> Tuple[int, ...]:
+    """Apportion ``batch`` items over the simplex fractions (hub first).
+
+    The 2-group case defers to :func:`split_sizes` so the pair path is
+    bit-identical to the PR-1 engine (including Python's banker's rounding
+    on .5 quotas); N-group uses largest-remainder apportionment."""
+    if len(fractions) == 2:
+        n_off, n_loc = split_sizes(batch, fractions[1])
+        return (n_loc, n_off)
+    quotas = [f * batch for f in fractions]
+    counts = [int(q) for q in quotas]
+    rem = batch - sum(counts)
+    order = sorted(range(len(quotas)),
+                   key=lambda g: (quotas[g] - counts[g], -g), reverse=True)
+    for g in order[:rem]:
+        counts[g] += 1
+    return tuple(counts)
+
+
 class OffloadEngine:
-    """Executes one workload batch split across a primary and an auxiliary
-    node group."""
+    """Executes one workload batch split across the node groups of a
+    topology (group 0 = hub/primary, groups 1.. = spokes/auxiliaries).
+
+    The 2-node positional constructor ``OffloadEngine(task_fn, primary,
+    auxiliary, link, ...)`` is kept as a deprecation shim over
+    ``Topology.pair`` and is exercised bit-identically by the tests."""
 
     def __init__(self, task_fn: Callable[[Any], Any],
-                 primary: NodeGroup, auxiliary: NodeGroup,
-                 link: LinkModel, *, payload_bytes_per_item: float,
+                 primary: Optional[NodeGroup] = None,
+                 auxiliary: Optional[NodeGroup] = None,
+                 link: Optional[LinkModel] = None, *,
+                 topology: Optional[Any] = None,
+                 payload_bytes_per_item: float,
                  distance_fn: Callable[[], float] = lambda: 1.0,
                  jit: bool = True):
+        if topology is None:
+            if primary is None or auxiliary is None or link is None:
+                raise ValueError("pass either topology= or the 2-node "
+                                 "(primary, auxiliary, link) triple")
+            from repro.core.topology import Topology
+            topology = Topology.pair(primary, auxiliary, link)
         self.task_fn = task_fn
-        self.primary, self.auxiliary = primary, auxiliary
-        self.link = link
+        self.topology = topology
         self.payload_bytes_per_item = payload_bytes_per_item
         self.distance_fn = distance_fn
         self.jit = jit  # False for host-loop tasks (e.g. a generate() loop)
         self._compiled: Dict[Tuple[str, int], Any] = {}
+
+    # --- 2-node legacy aliases (deprecation shim) ----------------------
+    @property
+    def primary(self) -> NodeGroup:
+        return self.topology.groups[0]
+
+    @property
+    def auxiliary(self) -> NodeGroup:
+        return self.topology.groups[1]
+
+    @property
+    def link(self) -> LinkModel:
+        return self.topology.links[1]
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -119,15 +245,14 @@ class OffloadEngine:
         return jax.tree.map(lambda a: a[lo:hi], batch)
 
     @staticmethod
-    def _await_groups(out_loc, out_rem, t0: float) -> Tuple[float, float]:
-        """Wait for both in-flight outputs, stamping each group's completion
+    def _await_groups(in_flight: Dict[str, Any], t0: float) -> Dict[str, float]:
+        """Wait for every in-flight output, stamping each group's completion
         time relative to the joint dispatch WITHOUT serializing on the other
-        group (blocking on one first would inflate the other's timestamp
-        and the controller would never see a faster remote)."""
+        groups (blocking on one first would inflate the others' timestamps
+        and the controller would never see a faster group)."""
         pending = {name: jax.tree.leaves(out)
-                   for name, out in (("local", out_loc), ("remote", out_rem))
-                   if out is not None}
-        done = {"local": 0.0, "remote": 0.0}
+                   for name, out in in_flight.items() if out is not None}
+        done = {name: 0.0 for name in in_flight}
         pollable = all(hasattr(leaf, "is_ready")
                        for leaves in pending.values() for leaf in leaves)
         if pollable:
@@ -142,60 +267,94 @@ class OffloadEngine:
             for name, leaves in pending.items():
                 jax.block_until_ready(leaves)
                 done[name] = time.perf_counter() - t0
-        return done["local"], done["remote"]
+        return done
 
-    def run(self, batch, r: float) -> OffloadReport:
-        """Dispatch both node groups, await after — overlapped execution.
+    def run(self, batch, split=None, *, r: Optional[float] = None
+            ) -> OffloadReport:
+        """Dispatch every node group, await after — overlapped execution.
 
-        With jitted tasks, JAX async dispatch returns futures immediately,
-        so the auxiliary program is in flight before the primary is awaited
-        and the measured wall clock is the true parallel makespan.  With
-        ``jit=False`` (host-loop tasks that block internally) the two calls
-        serialize and the report falls back to derived-overlap accounting.
+        ``split`` is a scalar r for the 2-node shim or a SplitVector /
+        fraction sequence (hub first) for N groups; ``r=`` is the
+        deprecated 2-node keyword spelling.  With jitted tasks, JAX
+        async dispatch returns futures immediately, so every spoke program
+        is in flight before the hub is awaited and the measured wall clock
+        is the true parallel makespan.  With ``jit=False`` (host-loop tasks
+        that block internally) the calls serialize and the report falls
+        back to derived-overlap accounting.
+
+        Batch layout matches PR 1's pair engine: spokes take their slices
+        from the front of the batch (in topology order), the hub keeps the
+        tail — so outputs merge back in original batch order.
         """
+        if (split is None) == (r is None):
+            raise TypeError("pass exactly one of split or the deprecated r=")
+        if split is None:
+            split = float(r)
+        groups = self.topology.groups
+        links = self.topology.links
+        G = len(groups)
+        fracs = _as_fractions(split, G)
         B = jax.tree.leaves(batch)[0].shape[0]
-        n_off, n_loc = split_sizes(B, r)
+        counts = split_counts(fracs, B)
         d = float(self.distance_fn())
-        payload = n_off * self.payload_bytes_per_item
-        t_off = float(offload_latency(self.link, payload, d)) if n_off else 0.0
-        e_off = float(offload_energy(self.link, payload, d)) if n_off else 0.0
 
-        out_loc = out_rem = None
-        t_loc = t_rem = t_par = 0.0
+        # slice bounds: spokes first (groups 1..G-1 in order), hub last
+        bounds: List[Tuple[int, int]] = [None] * G
+        lo = 0
+        for g in range(1, G):
+            bounds[g] = (lo, lo + counts[g])
+            lo += counts[g]
+        bounds[0] = (lo, B)
+
+        t_link = [0.0] * G
+        e_link = [0.0] * G
+        for g in range(1, G):
+            if counts[g]:
+                payload = counts[g] * self.payload_bytes_per_item
+                t_link[g] = float(offload_latency(links[g], payload, d))
+                e_link[g] = float(offload_energy(links[g], payload, d))
+
+        out: List[Any] = [None] * G
+        t_group = [0.0] * G
+        t_par = 0.0
         t0 = time.perf_counter()
         if self.jit:
-            # --- dispatch phase: launch BOTH groups, await NEITHER -----
-            if n_off:  # remote first: it pays link latency on top of exec
-                sl = self._slice_batch(batch, 0, n_off)
-                out_rem = self._get_fn(self.auxiliary, sl)(sl)
-            if n_loc:
-                sl = self._slice_batch(batch, n_off, B)
-                out_loc = self._get_fn(self.primary, sl)(sl)
+            # --- dispatch phase: launch ALL groups, await NONE ---------
+            # spokes first: they pay link latency on top of exec
+            for g in list(range(1, G)) + [0]:
+                if counts[g]:
+                    sl = self._slice_batch(batch, *bounds[g])
+                    out[g] = self._get_fn(groups[g], sl)(sl)
             # --- await phase: completion timestamps vs joint dispatch --
-            t_loc, t_rem = self._await_groups(out_loc, out_rem, t0)
+            done = self._await_groups(
+                {groups[g].name: out[g] for g in range(G)}, t0)
+            t_group = [done[groups[g].name] for g in range(G)]
             t_par = time.perf_counter() - t0
         else:
-            if n_loc:
-                t1 = time.perf_counter()
-                out_loc = jax.block_until_ready(
-                    self.task_fn(self._slice_batch(batch, n_off, B)))
-                t_loc = time.perf_counter() - t1
-            if n_off:
-                t1 = time.perf_counter()
-                out_rem = jax.block_until_ready(
-                    self.task_fn(self._slice_batch(batch, 0, n_off)))
-                t_rem = time.perf_counter() - t1
+            for g in [0] + list(range(1, G)):  # hub first, like PR 1
+                if counts[g]:
+                    t1 = time.perf_counter()
+                    out[g] = jax.block_until_ready(
+                        self.task_fn(self._slice_batch(batch, *bounds[g])))
+                    t_group[g] = time.perf_counter() - t1
 
-        outputs = [o for o in (out_rem, out_loc) if o is not None]
+        # merge in slice order (spokes ascending, hub last) = batch order
+        parts = [out[g] for g in list(range(1, G)) + [0] if out[g] is not None]
         merged = None
-        if outputs:
-            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *outputs) \
-                if len(outputs) > 1 else outputs[0]
-        return OffloadReport(r=r, n_local=n_loc, n_offloaded=n_off,
-                             t_local_s=t_loc, t_remote_s=t_rem,
-                             t_offload_s=t_off, payload_bytes=payload,
-                             e_offload_j=e_off, outputs=merged,
-                             t_parallel_s=t_par)
+        if parts:
+            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                                  *parts) if len(parts) > 1 else parts[0]
+        return OffloadReport(
+            r=1.0 - fracs[0], n_local=counts[0],
+            n_offloaded=B - counts[0],
+            t_local_s=t_group[0], t_remote_s=max(t_group[1:], default=0.0),
+            t_offload_s=max(t_link[1:], default=0.0),
+            payload_bytes=sum(counts[g] * self.payload_bytes_per_item
+                              for g in range(1, G) if counts[g]),
+            e_offload_j=sum(e_link), outputs=merged, t_parallel_s=t_par,
+            group_names=tuple(g.name for g in groups),
+            n_group=tuple(counts), t_group_s=tuple(t_group),
+            t_link_s=tuple(t_link))
 
 
 # ---------------------------------------------------------------------------

@@ -24,8 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Any, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import battery as batt_mod
@@ -33,16 +34,17 @@ from repro.core import mobility as mob_mod
 from repro.core.curvefit import FittedModels, fit_profiles
 from repro.core.profiler import MeasuredProfile
 from repro.core.solver import (SolverConstraints, SolverResult, objective,
-                               solve_split_ratio)
+                               solve_split_ratio, solve_star)
 
 
 @dataclass
 class OffloadDecision:
     offload: bool
-    split_ratio: float
+    split_ratio: float           # total offloaded fraction (1 − hub share)
     predicted_time: float
     reason: str
     solver: Optional[SolverResult] = None
+    split: Optional[Any] = None  # SplitVector for star topologies (PR 2)
 
 
 @dataclass
@@ -60,9 +62,23 @@ class TaskScheduler:
                  aux_prof: MeasuredProfile, pri_prof: MeasuredProfile,
                  off_prof: MeasuredProfile,
                  battery: Optional[batt_mod.BatteryState] = None,
-                 mobility: Optional[mob_mod.MobilityModel] = None):
+                 mobility: Optional[mob_mod.MobilityModel] = None,
+                 topology: Optional[Any] = None,
+                 extra_spokes: Sequence[Tuple[MeasuredProfile,
+                                              MeasuredProfile]] = ()):
+        """``extra_spokes``: per additional spoke beyond (aux_prof,
+        off_prof), its (exec, link-latency) profile pair — the scheduler
+        then solves the §VIII star (``solve_star``) instead of Eq. 4.
+        ``topology`` (optional) cross-checks the group count."""
         self.cfg = cfg
         self.aux_prof, self.pri_prof, self.off_prof = aux_prof, pri_prof, off_prof
+        self.extra_spokes = list(extra_spokes)
+        self.n_groups = 2 + len(self.extra_spokes)
+        if topology is not None and len(topology) != self.n_groups:
+            raise ValueError(
+                f"topology has {len(topology)} groups but profiles cover "
+                f"{self.n_groups} (aux + {len(self.extra_spokes)} extra)")
+        self.topology = topology
         self.battery = battery
         self.mobility = mobility
         self.latency_curve = mob_mod.default_latency_curve()
@@ -121,6 +137,11 @@ class TaskScheduler:
                 self.battery, t_dnn_s, t_drive_s, self.cfg.power_threshold_w))
             cons = dataclasses.replace(cons, r_min=max(cons.r_min, 0.9 * pressure))
 
+        if self.n_groups > 2:
+            dec = self._decide_star(models, cons)
+            self.history.append(dec)
+            return dec
+
         res = solve_split_ratio(models, cons)
         if not res.feasible:
             # paper §VII-B: search failed within bounds -> process locally
@@ -131,6 +152,49 @@ class TaskScheduler:
                                   "solved", res)
         self.history.append(dec)
         return dec
+
+    # ------------------------------------------------------------------
+    def _decide_star(self, models: FittedModels,
+                     cons: SolverConstraints) -> OffloadDecision:
+        """§VIII star topology: solve per-group fractions over the simplex
+        (makespan objective, ``solve_star``) instead of the scalar Eq. 4.
+        The mobility gate has already run; the battery floor (r_min) is
+        enforced on the TOTAL offloaded share by rescaling the spokes.
+        The C1 deadline and the β link-latency gate are checked on the
+        solved point like the pair path (infeasible → process locally,
+        paper §VII-B); per-spoke energy/memory caps are not profiled yet
+        (only T1/T3 fits exist per spoke — ROADMAP extension point)."""
+        # lazy import: topology.py imports this module at top level
+        from repro.core.topology import SplitVector, group_times_from_fits
+
+        spoke_fits = [(models.T1, models.T3)]
+        for exec_prof, link_prof in self.extra_spokes:
+            m = fit_profiles(exec_prof, self.pri_prof, link_prof)
+            spoke_fits.append((m.T1, m.T3))
+        fn = group_times_from_fits(models.T2, spoke_fits)
+        f_opt, t_opt = solve_star(fn, self.n_groups)
+        f = np.asarray(f_opt, np.float64)
+        if cons.r_min > 0.0 and (1.0 - f[0]) < cons.r_min:
+            # push work off the hub until the offload floor is met
+            spokes = f[1:]
+            spokes = spokes / spokes.sum() if spokes.sum() > 0 \
+                else np.full(self.n_groups - 1, 1.0 / (self.n_groups - 1))
+            f = np.concatenate([[1.0 - cons.r_min], cons.r_min * spokes])
+            t_opt = float(np.max(np.asarray(fn(f))))
+        # C1 deadline on the solved makespan; β on each spoke's link latency
+        tau_eff = cons.deadline_slack * cons.tau / cons.k_devices
+        beta_viol = any(float(T3(f[g])) > cons.beta
+                        for g, (_, T3) in enumerate(spoke_fits, start=1))
+        if float(t_opt) > tau_eff or beta_viol:
+            t_local = float(models.T2(0.0))
+            return OffloadDecision(
+                False, 0.0, t_local,
+                "star infeasible: falling back to local",
+                split=SplitVector((1.0,) + (0.0,) * (self.n_groups - 1)))
+        sv = SplitVector(tuple(f))
+        return OffloadDecision(offload=sv.r > 1e-3, split_ratio=sv.r,
+                               predicted_time=float(t_opt),
+                               reason="solved-star", split=sv)
 
 
 # ---------------------------------------------------------------------------
@@ -160,20 +224,41 @@ class SplitRatioController:
     """
 
     def __init__(self, cfg: Optional[ControllerConfig] = None,
-                 constraints: Optional[SolverConstraints] = None):
+                 constraints: Optional[SolverConstraints] = None,
+                 n_groups: int = 2):
+        """``n_groups`` > 2 switches the re-solve from Eq. 4 to the §VIII
+        star (``solve_star`` over per-group fractions); the 2-group path is
+        byte-for-byte the PR 1 controller."""
         self.cfg = cfg or ControllerConfig()
         self.constraints = constraints
-        self.rate_local: Optional[float] = None    # s per item, primary
+        self.n_groups = int(n_groups)
+        if self.n_groups < 2:
+            raise ValueError("need at least hub + one spoke")
+        self.rate_local: Optional[float] = None    # s per item, hub/primary
         self.rate_remote: Optional[float] = None   # s per item, auxiliary
         self.rate_link: Optional[float] = None     # s per item on the link
+        # star state: per-spoke EWMA rates, spoke g at index g-1
+        self._spoke_rates: List[Optional[float]] = [None] * (self.n_groups - 1)
+        self._spoke_links: List[Optional[float]] = [None] * (self.n_groups - 1)
         self._r = self._clip(self.cfg.r_init)
+        self._fractions = np.full(self.n_groups, 1.0 / self.n_groups)
         self._seen = 0
         self._batch = 0
         self.history: List[SolverResult] = []
 
     @property
     def r(self) -> float:
+        """Total offloaded share (1 − hub fraction for star topologies)."""
+        if self.n_groups > 2:
+            return float(1.0 - self._fractions[0])
         return self._r
+
+    @property
+    def fractions(self) -> np.ndarray:
+        """Per-group SplitVector fractions, hub first."""
+        if self.n_groups > 2:
+            return self._fractions.copy()
+        return np.array([1.0 - self._r, self._r])
 
     def _clip(self, r: float) -> float:
         """Solver output clipped to [r_min, r_max], then held away from the
@@ -192,13 +277,35 @@ class SplitRatioController:
             n_off = min(max(n_off, 1), n - 1)
         return n_off
 
+    def split_counts(self, n: int) -> Tuple[int, ...]:
+        """Per-group item counts (hub first) at the current split.  The
+        pair case routes through :meth:`split` (bit-compat with PR 1);
+        star uses largest-remainder apportionment with the exploration
+        floor — every group keeps at least one item when n allows, so no
+        group's EWMA rate ever goes dark."""
+        if self.n_groups == 2:
+            n_off = self.split(n)
+            return (n - n_off, n_off)
+        from repro.core.offload import split_counts as _apportion
+        counts = list(_apportion(tuple(self._fractions), n))
+        if self.cfg.explore > 0.0 and n >= self.n_groups:
+            for g in range(self.n_groups):
+                while counts[g] == 0:
+                    donor = int(np.argmax(counts))
+                    counts[donor] -= 1
+                    counts[g] += 1
+        return tuple(counts)
+
     def _ema(self, old: Optional[float], new: float) -> float:
         a = self.cfg.ema
         return new if old is None else (1 - a) * old + a * new
 
     def observe(self, report) -> float:
         """Fold one measured batch into the EWMAs; returns the (possibly
-        re-solved) split ratio to use for the next batch."""
+        re-solved) split ratio to use for the next batch.  Star controllers
+        consume the widened per-group report fields."""
+        if self.n_groups > 2:
+            return self._observe_star(report)
         if report.n_local:
             self.rate_local = self._ema(self.rate_local,
                                         report.t_local_s / report.n_local)
@@ -233,3 +340,62 @@ class SplitRatioController:
         self.history.append(res)
         if res.feasible:
             self._r = self._clip(res.r_opt)
+
+    # --- star topology (n_groups > 2) ---------------------------------
+    def _observe_star(self, report) -> float:
+        """Fold a widened OffloadReport (per-group timings, hub first)
+        into per-spoke EWMAs; re-solve the star every ``update_every``."""
+        if not report.t_group_s or len(report.n_group) != self.n_groups:
+            raise ValueError(
+                f"star controller needs per-group report fields for "
+                f"{self.n_groups} groups, got {len(report.n_group)}")
+        if report.n_group[0]:
+            self.rate_local = self._ema(
+                self.rate_local, report.t_group_s[0] / report.n_group[0])
+        for g in range(1, self.n_groups):
+            if report.n_group[g]:
+                self._spoke_rates[g - 1] = self._ema(
+                    self._spoke_rates[g - 1],
+                    report.t_group_s[g] / report.n_group[g])
+                self._spoke_links[g - 1] = self._ema(
+                    self._spoke_links[g - 1],
+                    report.t_link_s[g] / report.n_group[g])
+        self._batch = max(self._batch, sum(report.n_group))
+        self._seen += 1
+        if self._seen % self.cfg.update_every == 0 and \
+                self.rate_local is not None and \
+                all(r is not None for r in self._spoke_rates):
+            self._resolve_star()
+        return self.r
+
+    def _resolve_star(self):
+        """Re-solve per-group fractions from the live EWMA rates.  With
+        linear per-item costs the star makespan objective and Eq. 4
+        coincide at the optimum (see tests/test_solver.py), so this IS the
+        paper's solve, generalized."""
+        B = max(self._batch, 1)
+        loc = self.rate_local
+        spoke_cost = np.array(
+            [self._spoke_rates[g] + (self._spoke_links[g] or 0.0)
+             for g in range(self.n_groups - 1)])
+        costs = jnp.asarray(np.concatenate([[loc], spoke_cost]) * B,
+                            jnp.float32)
+
+        def group_time_fn(f):
+            return f * costs
+
+        f_opt, t_opt = solve_star(group_time_fn, self.n_groups)
+        f = np.asarray(f_opt, np.float64)
+        # exploration floor: no group goes fully dark (same rationale as
+        # the pair controller's explore margin)
+        e = self.cfg.explore
+        if e > 0.0:
+            f = np.maximum(f, e / max(self.n_groups - 1, 1))
+            f = f / f.sum()
+        self._fractions = f
+        t_base = float(loc * B)
+        self.history.append(SolverResult(
+            r_opt=float(1.0 - f[0]), t_opt=float(t_opt), feasible=True,
+            t_baseline=t_base,
+            improvement=1.0 - float(t_opt) / max(t_base, 1e-9),
+            diagnostics={"fractions": f.tolist()}))

@@ -203,10 +203,19 @@ def solve_star(group_time_fn, n_groups: int, *, iters: int = 800,
     built from FittedModels or analytic profiles.  Softmax parametrization
     + smooth-max (logsumexp) annealing keeps the solve jit-able and
     differentiable end-to-end.
+
+    The objective is normalized by its value at the uniform split before
+    descending: raw gradients scale with the workload's absolute seconds,
+    and on paper-magnitude profiles (tens of seconds) an unnormalized
+    lr=0.1 step saturates the softmax in one iteration and the solve
+    freezes wherever the first step landed.
     """
+    uniform = jnp.full((n_groups,), 1.0 / n_groups, jnp.float32)
+    scale = jnp.maximum(jnp.mean(group_time_fn(uniform)), 1e-9)
+
     def total(theta, temp):
         f = jax.nn.softmax(theta)
-        t = group_time_fn(f)
+        t = group_time_fn(f) / scale
         return temp * jax.scipy.special.logsumexp(t / temp)
 
     @jax.jit

@@ -1,0 +1,395 @@
+"""N-node topology + multi-task serving session (paper §VIII future work).
+
+The paper hard-wires one primary/auxiliary pair; its §VIII names
+star-topology multi-node offloading as the extension, and the headline
+evaluation runs five DNN tasks concurrently.  This module is that
+generalization as the core abstraction:
+
+* :class:`Topology` — an ordered list of :class:`~repro.core.offload.NodeGroup`s
+  plus per-edge :class:`~repro.core.network.LinkModel`s.  Group 0 is the
+  hub (the paper's "primary": work stays local there, no link cost);
+  groups 1.. are spokes.  ``Topology.pair`` reproduces the paper's 2-node
+  testbed, ``Topology.star`` the §VIII extension.
+* :class:`SplitVector` — per-group fractions on the simplex.  Reduces to
+  the paper's scalar r for the 2-node case (r = offloaded share).
+* :class:`HeteroRuntime` — one session object composing profiler →
+  curve-fit → solver → offload engine → continuous serving: a multi-task
+  registry (``add_task``) of per-group continuous-batching engines, and
+  ``serve(requests)`` interleaving tasks over the shared KV slots while an
+  online controller re-solves the split (Eq. 4 for 2 groups, ``solve_star``
+  beyond) from measured per-group timings.  ``serve`` returns a
+  :class:`ServeResult` whose structured telemetry the benchmarks consume
+  instead of hand-rolling report dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import LinkModel, offload_latency
+from repro.core.offload import NodeGroup, OffloadReport, split_counts
+from repro.core.scheduler import ControllerConfig, SplitRatioController
+from repro.serving.engine import (ContinuousServingEngine, RequestOutput,
+                                  ServeRequest)
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SplitVector:
+    """Per-group work fractions on the simplex, ordered like the topology
+    (hub first).  The paper's scalar split ratio is the 2-group special
+    case: r = 1 − f_hub."""
+    fractions: Tuple[float, ...]
+
+    def __post_init__(self):
+        fr = tuple(max(0.0, float(f)) for f in self.fractions)
+        s = sum(fr)
+        if s <= 0.0:
+            fr = (1.0,) + (0.0,) * (len(fr) - 1)  # degenerate: all local
+        else:
+            fr = tuple(f / s for f in fr)
+        object.__setattr__(self, "fractions", fr)
+
+    @staticmethod
+    def from_r(r: float, n_groups: int = 2) -> "SplitVector":
+        """Scalar split ratio → vector: hub keeps 1−r, spokes share r
+        equally (exactly the paper's pair when n_groups == 2)."""
+        r = float(np.clip(r, 0.0, 1.0))
+        spokes = max(n_groups - 1, 1)
+        return SplitVector((1.0 - r,) + (r / spokes,) * (n_groups - 1))
+
+    @property
+    def r(self) -> float:
+        """Total offloaded share (1 − hub fraction); the paper's r."""
+        return 1.0 - self.fractions[0]
+
+    def __len__(self) -> int:
+        return len(self.fractions)
+
+    def counts(self, batch: int) -> Tuple[int, ...]:
+        """Apportion ``batch`` items per group; the pair case is
+        bit-identical to ``split_sizes`` (see offload.split_counts)."""
+        return split_counts(self.fractions, batch)
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class Topology:
+    """Ordered node groups + per-edge links.  ``links[0]`` is None — the
+    hub's work never crosses a link; ``links[g]`` prices hub→group-g."""
+    groups: List[NodeGroup]
+    links: List[Optional[LinkModel]]
+    kind: str = "pair"
+
+    def __post_init__(self):
+        if len(self.groups) < 2:
+            raise ValueError("a topology needs at least hub + one spoke")
+        if len(self.links) != len(self.groups):
+            raise ValueError("need one link entry per group (hub's is None)")
+        if any(l is None for l in self.links[1:]):
+            raise ValueError("every spoke needs a LinkModel")
+        names = [g.name for g in self.groups]
+        if len(set(names)) != len(names):
+            # group name keys the engine's await map, the task registry's
+            # per-group engines and the telemetry — duplicates silently
+            # drop groups from all three
+            raise ValueError(f"group names must be unique, got {names}")
+
+    def __len__(self) -> int:
+        return len(self.groups)
+
+    @property
+    def hub(self) -> NodeGroup:
+        return self.groups[0]
+
+    @property
+    def spokes(self) -> List[NodeGroup]:
+        return self.groups[1:]
+
+    @staticmethod
+    def pair(primary: NodeGroup, auxiliary: NodeGroup,
+             link: LinkModel) -> "Topology":
+        """The paper's 2-node testbed: primary = hub, auxiliary = spoke."""
+        return Topology([primary, auxiliary], [None, link], kind="pair")
+
+    @staticmethod
+    def star(hub: NodeGroup, spokes: Sequence[NodeGroup],
+             links: Union[LinkModel, Sequence[LinkModel]]) -> "Topology":
+        """§VIII star: one hub, G−1 spokes, one link per spoke (a single
+        LinkModel is broadcast to every edge)."""
+        spokes = list(spokes)
+        if isinstance(links, LinkModel):
+            links = [links] * len(spokes)
+        return Topology([hub, *spokes], [None, *links], kind="star")
+
+
+# ---------------------------------------------------------------------------
+def group_times_from_fits(T2, spoke_fits) -> Callable:
+    """Adapter: Eq. 1-3 polynomial fits → ``solve_star`` group_time_fn.
+
+    ``T2`` is the hub's fitted exec time *vs r* (the paper stores the
+    primary's curve against the offloaded share, so the hub running
+    fraction f0 costs T2(1 − f0)); ``spoke_fits`` is [(T1_g, T3_g), ...]
+    per spoke, each evaluated at that spoke's own fraction.
+    """
+    def group_time_fn(f):
+        ts = [T2(1.0 - f[0])]
+        for g, (T1, T3) in enumerate(spoke_fits, start=1):
+            ts.append(T1(f[g]) + T3(f[g]))
+        return jnp.stack(ts)
+    return group_time_fn
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class TaskSpec:
+    """One registered workload: a model config + params, with one
+    continuous-batching engine per node group (jitted programs shared
+    across sibling groups — same cfg ⇒ byte-identical programs)."""
+    name: str
+    cfg: Any
+    params: Any
+    engines: Dict[str, ContinuousServingEngine]
+    payload_bytes_per_item: float
+    max_new: Optional[int]        # per-task generation cap (None = only
+                                  # each request's own max_new applies)
+
+
+@dataclass
+class ServeResult:
+    """Outputs + structured telemetry from one ``HeteroRuntime.serve``."""
+    outputs: Dict[str, List[RequestOutput]]   # task name → per-request
+    telemetry: dict = field(default_factory=dict)
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.telemetry, **kw)
+
+
+class HeteroRuntime:
+    """Session facade over the whole HeteroEdge pipeline.
+
+        topo = Topology.star(hub, [s1, s2], C.WIFI_5GHZ)
+        rt = HeteroRuntime(topo, slots=4, max_len=64)
+        rt.add_task("posenet", cfg_a, params_a)
+        rt.add_task("segnet", cfg_b, params_b)
+        result = rt.serve(requests)        # ServeRequest.task routes each
+        print(result.to_json(indent=2))
+
+    Requests are drained in arrival-order waves of ``2·slots·(G−1)``; each
+    wave is apportioned across groups by the live :class:`SplitVector`
+    (online controller: Eq. 4 when the topology is a pair, ``solve_star``
+    beyond), every group's continuous-batching engines drain their share
+    per task, and the measured per-group wall clocks feed back into the
+    controller for the next wave.
+    """
+
+    def __init__(self, topology: Topology, *, slots: int = 4,
+                 max_len: int = 64,
+                 controller: Optional[SplitRatioController] = None,
+                 link_distance: float = 1.0):
+        self.topology = topology
+        self.slots = slots
+        self.max_len = max_len
+        self.link_distance = link_distance
+        self.controller = controller or SplitRatioController(
+            ControllerConfig(update_every=2), n_groups=len(topology))
+        if self.controller.n_groups != len(topology):
+            raise ValueError(
+                f"controller is sized for {self.controller.n_groups} groups "
+                f"but the topology has {len(topology)}")
+        self.tasks: Dict[str, TaskSpec] = {}
+
+    # ------------------------------------------------------------------
+    def add_task(self, name: str, cfg, params, *,
+                 max_new: Optional[int] = None,
+                 max_len: Optional[int] = None,
+                 payload_bytes_per_item: Optional[float] = None) -> TaskSpec:
+        """Register a workload in the session's multi-task registry: one
+        slot-based engine per node group, sharing jitted programs.
+        ``max_new`` caps every request of this task (requests asking for
+        more are clamped at dispatch)."""
+        if name in self.tasks:
+            raise ValueError(f"task {name!r} already registered")
+        ml = max_len or self.max_len
+        engines: Dict[str, ContinuousServingEngine] = {}
+        first: Optional[ContinuousServingEngine] = None
+        for grp in self.topology.groups:
+            eng = ContinuousServingEngine(cfg, params, slots=self.slots,
+                                          max_len=ml, share_from=first)
+            engines[grp.name] = eng
+            first = first or eng
+        payload = payload_bytes_per_item
+        if payload is None:
+            payload = float(getattr(cfg, "d_model", 256)) * 2.0 * 16
+        spec = TaskSpec(name=name, cfg=cfg, params=params, engines=engines,
+                        payload_bytes_per_item=payload, max_new=max_new)
+        self.tasks[name] = spec
+        return spec
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _capped(spec: TaskSpec,
+                reqs: List[ServeRequest]) -> List[ServeRequest]:
+        """Apply the task's max_new cap (requests are never mutated)."""
+        if spec.max_new is None:
+            return reqs
+        return [dataclasses.replace(r, max_new=min(r.max_new, spec.max_new))
+                if r.max_new > spec.max_new else r for r in reqs]
+
+    def _task_of(self, req: ServeRequest) -> str:
+        task = getattr(req, "task", "") or ""
+        if task:
+            if task not in self.tasks:
+                raise KeyError(f"request {req.uid} names unregistered task "
+                               f"{task!r} (have {sorted(self.tasks)})")
+            return task
+        if len(self.tasks) == 1:
+            return next(iter(self.tasks))
+        raise KeyError(f"request {req.uid} is untagged but "
+                       f"{len(self.tasks)} tasks are registered")
+
+    def _split_for(self, n: int, split) -> Tuple[SplitVector, Tuple[int, ...]]:
+        """Resolve this wave's SplitVector + per-group counts.  ``split``:
+        None → live controller (with its exploration floor), scalar r or
+        SplitVector/sequence → fixed."""
+        G = len(self.topology)
+        if split is None:
+            counts = self.controller.split_counts(n)
+            return SplitVector(self.controller.fractions), counts
+        if isinstance(split, SplitVector):
+            sv = split
+        elif isinstance(split, (int, float)):
+            sv = SplitVector.from_r(float(split), G)
+        else:
+            sv = SplitVector(tuple(split))
+        if len(sv) != G:
+            raise ValueError(f"split has {len(sv)} fractions for {G} groups")
+        return sv, sv.counts(n)
+
+    def warmup(self, requests: Sequence[ServeRequest]) -> None:
+        """Run one representative request of each task through every
+        group's engine so wave timings measure steady-state serving."""
+        seen = set()
+        for req in requests:
+            task = self._task_of(req)
+            if task in seen:
+                continue
+            seen.add(task)
+            spec = self.tasks[task]
+            for eng in spec.engines.values():
+                eng.run(self._capped(spec, [req]))
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence[ServeRequest], *, split=None,
+              wave: Optional[int] = None, warm: bool = True,
+              verbose: bool = False) -> ServeResult:
+        """Drain a (possibly mixed-task) request stream through the
+        topology.  Returns outputs per task + structured telemetry."""
+        if not self.tasks:
+            raise RuntimeError("no tasks registered — call add_task first")
+        G = len(self.topology)
+        wave = wave or 2 * self.slots * (G - 1)
+        requests = list(requests)
+        if warm and requests:
+            self.warmup(requests[:max(len(self.tasks) * 2, 4)])
+
+        outputs: Dict[str, List[RequestOutput]] = {t: [] for t in self.tasks}
+        waves_tel: List[dict] = []
+        total_tokens = 0
+        done = 0
+        t_start = time.perf_counter()
+        while done < len(requests):
+            chunk = requests[done:done + wave]
+            done += len(chunk)
+            sv, counts = self._split_for(len(chunk), split)
+
+            # partition: spokes take the front of the wave in topology
+            # order, the hub keeps the tail (PR 1's [aux; pri] layout)
+            shares: List[List[ServeRequest]] = [None] * G
+            lo = 0
+            for g in range(1, G):
+                shares[g] = chunk[lo:lo + counts[g]]
+                lo += counts[g]
+            shares[0] = chunk[lo:]
+
+            per_group: Dict[str, dict] = {}
+            t_group = [0.0] * G
+            t_link = [0.0] * G
+            toks_group = [0] * G
+            t0 = time.perf_counter()
+            for g, grp in enumerate(self.topology.groups):
+                share = shares[g]
+                by_task: Dict[str, List[ServeRequest]] = {}
+                for req in share:
+                    by_task.setdefault(self._task_of(req), []).append(req)
+                tg0 = time.perf_counter()
+                payload = 0.0
+                for task, reqs_t in by_task.items():
+                    spec = self.tasks[task]
+                    outs, _ = spec.engines[grp.name].run(
+                        self._capped(spec, reqs_t))
+                    outputs[task].extend(outs)
+                    toks_group[g] += sum(len(o.tokens) for o in outs)
+                    payload += len(reqs_t) * spec.payload_bytes_per_item
+                t_group[g] = time.perf_counter() - tg0
+                if g > 0 and share:
+                    t_link[g] = float(offload_latency(
+                        self.topology.links[g], payload, self.link_distance))
+                per_group[grp.name] = {
+                    "n": len(share), "wall_s": t_group[g],
+                    "link_s": t_link[g], "tokens": toks_group[g],
+                    "tasks": {t: len(r) for t, r in by_task.items()}}
+            wall = time.perf_counter() - t0
+            total_tokens += sum(toks_group)
+
+            rep = OffloadReport(
+                r=sv.r, n_local=counts[0],
+                n_offloaded=len(chunk) - counts[0],
+                t_local_s=t_group[0],
+                t_remote_s=max(t_group[1:], default=0.0),
+                t_offload_s=max(t_link[1:], default=0.0),
+                payload_bytes=0.0, e_offload_j=0.0,
+                group_names=tuple(g.name for g in self.topology.groups),
+                n_group=tuple(counts), t_group_s=tuple(t_group),
+                t_link_s=tuple(t_link))
+            if split is None:
+                self.controller.observe(rep)
+            waves_tel.append({
+                "wave": len(waves_tel), "n": len(chunk),
+                "split": [round(float(f), 4) for f in sv.fractions],
+                "counts": [int(c) for c in counts], "wall_s": wall,
+                "tokens": sum(toks_group), "per_group": per_group})
+            if verbose:
+                counts_str = "/".join(str(c) for c in counts)
+                print(f"wave {len(waves_tel) - 1}: {len(chunk):2d} reqs "
+                      f"split={counts_str} {sum(toks_group)} toks in "
+                      f"{wall:.2f}s "
+                      f"({sum(toks_group) / max(wall, 1e-9):.1f} tok/s)")
+
+        wall_total = time.perf_counter() - t_start
+        for outs in outputs.values():
+            outs.sort(key=lambda o: o.uid)
+        telemetry = {
+            "topology": self.topology.kind,
+            "groups": [g.name for g in self.topology.groups],
+            "slots": self.slots,
+            "tasks": sorted(self.tasks),
+            "waves": waves_tel,
+            "totals": {
+                "requests": len(requests), "tokens": total_tokens,
+                "wall_s": wall_total,
+                "tok_per_s": total_tokens / max(wall_total, 1e-9),
+                "final_split": [round(float(f), 4) for f in (
+                    self.controller.fractions if split is None
+                    else self._split_for(max(len(requests), 1),
+                                         split)[0].fractions)],
+            },
+        }
+        return ServeResult(outputs=outputs, telemetry=telemetry)

@@ -2,26 +2,32 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto] \
-        [--continuous] [--slots 4]
+        [--continuous] [--slots 4] [--topology pair|star] [--nodes N] \
+        [--telemetry-json out.json]
 
 Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
-loop: profile a calibration batch, fit, solve for r*, then split every
-arriving batch between the primary and auxiliary node groups (halves of
-the device set; on 1 device both groups share it — the decision logic and
+loop: profile a calibration batch, fit, solve for the split, then divide
+every arriving batch across the topology's node groups (partitions of the
+device set; on 1 device all groups share it — the decision logic and
 accounting are identical).
 
-``--continuous`` swaps the static per-batch engine for the slot-based
-continuous-batching runtime: requests stream through fixed KV-cache slots
-on each node group, the queue is split by the live ratio from
-``SplitRatioController`` (EWMA-smoothed measured timings re-solved into
-Eq. 4 every few waves), and mixed-length requests no longer serialize on
-the slowest member of their batch.
+``--topology star --nodes N`` builds the §VIII star (hub + N−1 spokes)
+instead of the paper's pair; the split becomes a per-group SplitVector
+solved by ``solve_star``.
+
+``--continuous`` swaps the static per-batch engine for the
+:class:`~repro.core.topology.HeteroRuntime` session: requests stream
+through fixed KV-cache slots on each node group, waves are apportioned by
+the live split from ``SplitRatioController`` (EWMA-smoothed measured
+timings re-solved every few waves), and the structured per-wave telemetry
+can be dumped with ``--telemetry-json``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import time
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
@@ -30,29 +36,86 @@ import repro.core as C
 from repro.configs.base import get_config, list_configs, reduced
 from repro.data.pipeline import request_stream
 from repro.models import model as M
-from repro.serving.engine import (ContinuousServingEngine, ServeRequest,
-                                  ServingEngine)
+from repro.serving.engine import ServeRequest, ServingEngine
+
+
+def parse_split(value: str) -> Tuple[str, Optional[float]]:
+    """One parser for ``--split`` on every path: returns (mode, r) where
+    mode ∈ {"auto", "none", "fixed"}.  "auto" → solver decides (r None);
+    "none" → keep everything local (r 0.0); a float → fixed ratio clipped
+    to [0, 1]."""
+    v = value.strip().lower()
+    if v == "auto":
+        return "auto", None
+    if v == "none":
+        return "none", 0.0
+    try:
+        return "fixed", float(np.clip(float(v), 0.0, 1.0))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f'--split must be "auto", "none" or a float, got {value!r}')
+
+
+def partition_devices(devs: list, nodes: int) -> list:
+    """Split the device list into ``nodes`` contiguous groups covering
+    EVERY device (earlier groups absorb the remainder of an uneven split
+    — no device is left idle); hosts with fewer devices than groups fall
+    back to sharing device 0."""
+    if len(devs) < nodes:
+        return [list(devs[g:g + 1] or devs[:1]) for g in range(nodes)]
+    base, rem = divmod(len(devs), nodes)
+    slices, lo = [], 0
+    for g in range(nodes):
+        hi = lo + base + (1 if g < rem else 0)
+        slices.append(list(devs[lo:hi]))
+        lo = hi
+    return slices
+
+
+def build_topology(kind: str, nodes: int) -> C.Topology:
+    """Partition the visible devices into ``nodes`` groups (each falls back
+    to sharing device 0 when the host has fewer devices — decision logic
+    and accounting are identical).  Hub gets the Nano-class profile, spokes
+    the Xavier-class one, per the paper's testbed asymmetry."""
+    if nodes < 2:
+        raise ValueError("--nodes must be >= 2 (hub + at least one spoke)")
+    if kind == "pair" and nodes != 2:
+        raise ValueError("--topology pair implies --nodes 2")
+    slices = partition_devices(jax.devices(), nodes)
+    hub = C.NodeGroup("primary", slices[0], C.JETSON_NANO)
+    spokes = [C.NodeGroup(f"auxiliary{g}" if nodes > 2 else "auxiliary",
+                          slices[g], C.JETSON_XAVIER)
+              for g in range(1, nodes)]
+    if kind == "pair":
+        return C.Topology.pair(hub, spokes[0], C.WIFI_5GHZ)
+    return C.Topology.star(hub, spokes, C.WIFI_5GHZ)
 
 
 def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
-                     slots: int, split: str, link=None) -> None:
-    """Continuous-batching collaborative serving over a request stream.
+                     slots: int, split: str,
+                     topology: Optional[C.Topology] = None,
+                     link=None, telemetry_path: Optional[str] = None
+                     ) -> C.ServeResult:
+    """Continuous-batching collaborative serving over a request stream,
+    through the HeteroRuntime session (pair or star topology).
 
-    Requests arrive in waves of ``2*slots``; each wave is split between the
-    auxiliary (offloaded share r) and primary node groups, both slot
-    runtimes drain their share, and the measured wave timings feed the
-    online controller that re-solves the split ratio for the next wave.
+    Requests arrive in waves; each wave is apportioned across the node
+    groups by the live SplitVector, every group's slot runtime drains its
+    share, and the measured wave timings feed the online controller that
+    re-solves the split for the next wave.
     """
-    link = link or C.WIFI_5GHZ
+    topology = topology or build_topology("pair", 2)
+    if link is not None:
+        topology = C.Topology(topology.groups,
+                              [None] + [link] * (len(topology) - 1),
+                              kind=topology.kind)
     offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
     max_len = prompt_len + offset + max_new + 8
-    pri_eng = ContinuousServingEngine(cfg, params, slots=slots,
-                                      max_len=max_len)
-    aux_eng = ContinuousServingEngine(cfg, params, slots=slots,
-                                      max_len=max_len, share_from=pri_eng)
-    ctl = C.SplitRatioController(C.ControllerConfig(update_every=2))
-    fixed_r = None if split == "auto" else float(np.clip(float(split), 0.0, 1.0))
-    payload_item = prompt_len * cfg.d_model * 2
+    runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len)
+    runtime.add_task(cfg.name, cfg, params,
+                     max_new=max_new,
+                     payload_bytes_per_item=prompt_len * cfg.d_model * 2)
+    mode, fixed_r = parse_split(split)
 
     # each request keeps its own completion length (capped at --max-new) —
     # mixed lengths are exactly what the slot runtime absorbs
@@ -60,49 +123,21 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                     r.prompt[:prompt_len],
                     (0, max(0, prompt_len - len(r.prompt)))).astype(np.int32),
                     max_new=max(1, min(r.max_new_tokens, max_new)),
-                    frontend=r.frontend)
+                    frontend=r.frontend, task=cfg.name)
                 for r in reqs]
-    # warm both runtimes so wave timings measure steady-state serving
-    pri_eng.run(requests[:1])
-    aux_eng.run(requests[:1])
-
-    wave = 2 * slots
-    done = 0
-    t_start = time.perf_counter()
-    total_tokens = 0
-    while done < len(requests):
-        chunk = requests[done:done + wave]
-        done += len(chunk)
-        if fixed_r is not None:
-            r = fixed_r
-            n_off = int(round(r * len(chunk)))
-        else:
-            r = ctl.r
-            n_off = ctl.split(len(chunk))  # keeps both groups observable
-        aux_share, pri_share = chunk[:n_off], chunk[n_off:]
-        t0 = time.perf_counter()
-        st_a = aux_eng.run(aux_share)[1] if aux_share else None
-        st_p = pri_eng.run(pri_share)[1] if pri_share else None
-        wall = time.perf_counter() - t0
-        toks = sum(s.total_tokens for s in (st_a, st_p) if s)
-        total_tokens += toks
-        t_off = float(C.offload_latency(link, n_off * payload_item, 1.0)) \
-            if n_off else 0.0
-        rep = C.OffloadReport(
-            r=r, n_local=len(pri_share), n_offloaded=len(aux_share),
-            t_local_s=st_p.prefill_s + st_p.decode_s if st_p else 0.0,
-            t_remote_s=st_a.prefill_s + st_a.decode_s if st_a else 0.0,
-            t_offload_s=t_off, payload_bytes=n_off * payload_item,
-            e_offload_j=0.0)
-        if fixed_r is None:
-            ctl.observe(rep)
-        print(f"wave: {len(chunk):2d} reqs r={r:.2f} "
-              f"local={len(pri_share)} offloaded={len(aux_share)} "
-              f"{toks} toks in {wall:.2f}s ({toks / max(wall, 1e-9):.1f} tok/s)")
-    wall = time.perf_counter() - t_start
-    print(f"continuous: {len(requests)} requests, {total_tokens} tokens in "
-          f"{wall:.2f}s ({total_tokens / max(wall, 1e-9):.1f} tok/s), "
-          f"final r={fixed_r if fixed_r is not None else ctl.r:.2f}")
+    result = runtime.serve(requests, wave=2 * slots * (len(topology) - 1),
+                           split=None if mode == "auto" else fixed_r,
+                           verbose=True)
+    tot = result.telemetry["totals"]
+    print(f"continuous[{topology.kind}]: {tot['requests']} requests, "
+          f"{tot['tokens']} tokens in {tot['wall_s']:.2f}s "
+          f"({tot['tok_per_s']:.1f} tok/s), "
+          f"final split={tot['final_split']}")
+    if telemetry_path:
+        with open(telemetry_path, "w") as fh:
+            fh.write(result.to_json(indent=2))
+        print(f"telemetry -> {telemetry_path}")
+    return result
 
 
 def main():
@@ -119,7 +154,14 @@ def main():
                     help="slot-based continuous batching runtime")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV-cache slots per node group (continuous mode)")
+    ap.add_argument("--topology", choices=("pair", "star"), default="pair",
+                    help="2-node pair (paper) or §VIII star")
+    ap.add_argument("--nodes", type=int, default=None,
+                    help="total node groups (default 2 for pair, 3 for star)")
+    ap.add_argument("--telemetry-json", default=None, metavar="PATH",
+                    help="write HeteroRuntime telemetry JSON here")
     args = ap.parse_args()
+    nodes = args.nodes or (2 if args.topology == "pair" else 3)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -128,8 +170,10 @@ def main():
         cfg = dataclasses.replace(cfg, kv_quant="int8")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     print(f"arch={cfg.name}{' (reduced)' if args.reduced else ''}"
-          f"{' kv=int8' if args.kv_int8 else ''}")
+          f"{' kv=int8' if args.kv_int8 else ''} "
+          f"topology={args.topology}/{nodes}")
 
+    topology = build_topology(args.topology, nodes)
     P = args.prompt_len
     reqs = request_stream(cfg.vocab_size, n=args.requests, mean_prompt=P,
                           seed=0, frontend_tokens=cfg.frontend_tokens,
@@ -138,7 +182,8 @@ def main():
     if args.continuous:
         serve_continuous(cfg, params, reqs, prompt_len=P,
                          max_new=args.max_new, slots=args.slots,
-                         split=args.split if args.split != "none" else "0.0")
+                         split=args.split, topology=topology,
+                         telemetry_path=args.telemetry_json)
         return
 
     prompts = np.stack([np.pad(r.prompt[:P], (0, max(0, P - len(r.prompt))))
@@ -153,7 +198,8 @@ def main():
                             max_new=args.max_new,
                             frontend=b.get("frontend")).tokens
 
-    if args.split == "none":
+    mode, fixed_r = parse_split(args.split)
+    if mode == "none":
         t0 = time.perf_counter()
         toks = serve_task(batch)
         wall = time.perf_counter() - t0
@@ -162,15 +208,11 @@ def main():
         return
 
     # --- HeteroEdge split -------------------------------------------------
-    devs = jax.devices()
-    half = max(1, len(devs) // 2)
-    primary = C.NodeGroup("primary", devs[:half], C.JETSON_NANO)
-    auxiliary = C.NodeGroup("auxiliary", devs[half:] or devs[:half],
-                            C.JETSON_XAVIER)
-    eng = C.OffloadEngine(lambda b: serve_task(b), primary, auxiliary,
-                          C.WIFI_5GHZ, payload_bytes_per_item=P * cfg.d_model * 2,
+    eng = C.OffloadEngine(lambda b: serve_task(b), topology=topology,
+                          payload_bytes_per_item=P * cfg.d_model * 2,
                           jit=False)
-    if args.split == "auto":
+    G = len(topology)
+    if mode == "auto":
         # calibrate on a probe slice, synthesize profiles, solve
         t0 = time.perf_counter()
         serve_task({k: v[:2] for k, v in batch.items()})
@@ -181,15 +223,26 @@ def main():
             aux_p.add(r, probe * r, 6 * r, 50 * r)
             pri_p.add(r, probe * (1 - r) * 2.2, 5, 60 * (1 - r) + 15)
             off_p.add(r, 0.01 * r * args.requests, 0, 0)
-        res = C.solve_split_ratio(
-            C.fit_profiles(aux_p, pri_p, off_p),
-            C.SolverConstraints(tau=probe * 2.2 * args.requests / 2))
-        r = res.r_opt
-        print(f"solver: r* = {r:.2f} (predicted T {res.t_opt:.2f}s)")
+        if G == 2:
+            res = C.solve_split_ratio(
+                C.fit_profiles(aux_p, pri_p, off_p),
+                C.SolverConstraints(tau=probe * 2.2 * args.requests / 2))
+            split = res.r_opt
+            print(f"solver: r* = {res.r_opt:.2f} "
+                  f"(predicted T {res.t_opt:.2f}s)")
+        else:
+            m = C.fit_profiles(aux_p, pri_p, off_p)
+            fn = C.group_times_from_fits(m.T2, [(m.T1, m.T3)] * (G - 1))
+            f_opt, t_opt = C.solve_star(fn, G)
+            split = C.SplitVector(tuple(f_opt))
+            print(f"solve_star: f* = {[f'{x:.2f}' for x in split.fractions]} "
+                  f"(predicted makespan {t_opt:.2f}s)")
     else:
-        r = float(args.split)
-    rep = eng.run(batch, r)
-    print(f"r={r:.2f}: local={rep.n_local} offloaded={rep.n_offloaded}  "
+        split = C.SplitVector.from_r(fixed_r, G) if G > 2 else fixed_r
+    rep = eng.run(batch, split)
+    per_group = " ".join(f"{n}={c}" for n, c in zip(rep.group_names,
+                                                    rep.n_group))
+    print(f"r={rep.r:.2f} [{per_group}]  "
           f"T_parallel={rep.t_parallel:.2f}s T_serial={rep.t_serial:.2f}s "
           f"link={rep.t_offload_s*1e3:.1f}ms")
     print("outputs:", rep.outputs.shape)

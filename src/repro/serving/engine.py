@@ -174,6 +174,8 @@ class ServeRequest:
     prompt: np.ndarray                 # [P] int32 (padded to the engine's P)
     max_new: int
     frontend: Optional[np.ndarray] = None
+    task: str = ""                     # HeteroRuntime registry key ("" =
+                                       # sole registered task)
 
 
 @dataclass

@@ -1,0 +1,503 @@
+"""N-node topology, SplitVector, HeteroRuntime session + back-compat shims.
+
+Covers the PR 2 acceptance criteria directly:
+  * a 3-group star HeteroRuntime serves a mixed two-task stream end-to-end
+    with solve_star-derived SplitVectors,
+  * the 2-node path through the new API reproduces the PR 1
+    continuous-batching token streams bit-identically,
+  * the deprecated positional OffloadEngine shim is token-identical to the
+    topology-first path.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core as C
+from repro.configs.base import get_config, reduced
+from repro.core.offload import mesh_axis_sizes, split_counts, split_sizes
+from repro.models import model as M
+from repro.serving.engine import ContinuousServingEngine, ServeRequest
+
+
+@pytest.fixture(scope="module")
+def small_llama():
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _dev():
+    return jax.devices()[0]
+
+
+def _star3(names=("hub", "s1", "s2")):
+    d = _dev()
+    return C.Topology.star(C.NodeGroup(names[0], [d], C.JETSON_NANO),
+                           [C.NodeGroup(n, [d], C.JETSON_XAVIER)
+                            for n in names[1:]],
+                           C.WIFI_5GHZ)
+
+
+# --- SplitVector -----------------------------------------------------------
+def test_split_vector_normalizes_and_reduces_to_r():
+    sv = C.SplitVector((2.0, 1.0, 1.0))
+    assert np.isclose(sum(sv.fractions), 1.0)
+    assert np.isclose(sv.r, 0.5)
+    assert len(sv) == 3
+    # degenerate all-zero input falls back to all-local
+    assert C.SplitVector((0.0, 0.0)).fractions == (1.0, 0.0)
+
+
+def test_split_vector_from_r_pair_and_star():
+    assert C.SplitVector.from_r(0.7).fractions == pytest.approx((0.3, 0.7))
+    sv = C.SplitVector.from_r(0.6, n_groups=4)
+    assert sv.fractions == pytest.approx((0.4, 0.2, 0.2, 0.2))
+    assert sv.r == pytest.approx(0.6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(r=st.floats(0.0, 1.0), B=st.integers(1, 64))
+def test_split_vector_pair_counts_bit_identical_to_split_sizes(r, B):
+    """The 2-group apportionment must match PR 1's split_sizes exactly
+    (including Python's banker's rounding on .5 quotas) so the pair path
+    through the new API is bit-identical."""
+    n_off, n_loc = split_sizes(B, r)
+    assert C.SplitVector.from_r(r).counts(B) == (n_loc, n_off)
+
+
+@settings(max_examples=40, deadline=None)
+@given(B=st.integers(1, 64), a=st.floats(0.01, 1.0), b=st.floats(0.01, 1.0),
+       c=st.floats(0.01, 1.0))
+def test_split_vector_star_counts_partition_batch(B, a, b, c):
+    counts = C.SplitVector((a, b, c)).counts(B)
+    assert sum(counts) == B
+    assert all(n >= 0 for n in counts)
+
+
+def test_split_counts_largest_remainder():
+    assert split_counts((0.4, 0.3, 0.3), 10) == (4, 3, 3)
+    assert split_counts((1 / 3, 1 / 3, 1 / 3), 8) in ((4, 2, 2), (3, 3, 2))
+
+
+# --- Topology --------------------------------------------------------------
+def test_topology_constructors():
+    d = _dev()
+    pri = C.NodeGroup("pri", [d], C.JETSON_NANO)
+    aux = C.NodeGroup("aux", [d], C.JETSON_XAVIER)
+    pair = C.Topology.pair(pri, aux, C.WIFI_5GHZ)
+    assert len(pair) == 2 and pair.kind == "pair"
+    assert pair.hub is pri and pair.spokes == [aux]
+    assert pair.links[0] is None and pair.links[1] is C.WIFI_5GHZ
+
+    star = _star3()
+    assert len(star) == 3 and star.kind == "star"
+    assert all(link is C.WIFI_5GHZ for link in star.links[1:])
+
+
+def test_topology_validation():
+    d = _dev()
+    g = C.NodeGroup("g", [d], C.JETSON_NANO)
+    g2 = C.NodeGroup("g2", [d], C.JETSON_NANO)
+    with pytest.raises(ValueError):
+        C.Topology([g], [None])                      # no spoke
+    with pytest.raises(ValueError):
+        C.Topology([g, g2], [None])                  # link count mismatch
+    with pytest.raises(ValueError):
+        C.Topology([g, g2], [None, None])            # spoke without a link
+    with pytest.raises(ValueError, match="unique"):
+        # duplicate names would silently collapse the engine's await map,
+        # the task registry and the telemetry
+        C.Topology([g, g], [None, C.WIFI_5GHZ])
+
+
+# --- NodeGroup.mesh / mesh_axis_sizes (satellite fix) ----------------------
+def test_mesh_axis_sizes_balanced():
+    assert mesh_axis_sizes(8, 2) == (4, 2)
+    assert mesh_axis_sizes(4, 2) == (2, 2)
+    assert mesh_axis_sizes(6, 2) == (3, 2)
+    assert mesh_axis_sizes(7, 2) == (7, 1)           # prime degenerates
+    assert mesh_axis_sizes(12, 3) == (3, 2, 2)
+    assert mesh_axis_sizes(1, 2) == (1, 1)
+    # every factorization covers the devices exactly
+    for n in range(1, 33):
+        for ax in (1, 2, 3):
+            sizes = mesh_axis_sizes(n, ax)
+            assert len(sizes) == ax and int(np.prod(sizes)) == n
+
+
+def test_mesh_axis_sizes_explicit_override():
+    assert mesh_axis_sizes(8, 2, (2, 4)) == (2, 4)
+    with pytest.raises(ValueError):
+        mesh_axis_sizes(8, 2, (3, 3))                # doesn't cover 8
+    with pytest.raises(ValueError):
+        mesh_axis_sizes(8, 2, (8,))                  # wrong arity
+
+
+def test_node_group_mesh_multi_axis():
+    """Regression: the old reshape(-1, len(devices) // 1) produced a bogus
+    (1, N) shape for any real 2-axis mesh."""
+    g = C.NodeGroup("g", [_dev()], C.JETSON_NANO)
+    m = g.mesh(("data", "model"))
+    assert dict(m.shape) == {"data": 1, "model": 1}
+    m1 = g.mesh()
+    assert dict(m1.shape) == {"data": 1}
+
+
+# --- N-group OffloadEngine -------------------------------------------------
+def test_offload_engine_star_dispatch_and_merge():
+    topo = _star3()
+
+    def task(b):
+        return jax.tree.map(lambda a: a * 2.0, b)
+
+    eng = C.OffloadEngine(task, topology=topo, payload_bytes_per_item=1e3)
+    batch = {"x": jnp.arange(12.0)[:, None]}
+    rep = eng.run(batch, C.SplitVector((0.5, 0.25, 0.25)))
+    assert rep.group_names == ("hub", "s1", "s2")
+    assert rep.n_group == (6, 3, 3)
+    assert sum(rep.n_group) == 12
+    assert len(rep.t_group_s) == 3 and len(rep.t_link_s) == 3
+    assert rep.t_link_s[0] == 0.0                    # hub pays no link
+    assert rep.t_link_s[1] > 0.0 and rep.t_link_s[2] > 0.0
+    assert rep.t_parallel_s > 0.0                    # measured, not derived
+    assert rep.n_local == 6 and rep.n_offloaded == 6
+    assert rep.r == pytest.approx(0.5)
+    # outputs merge back in original batch order
+    np.testing.assert_array_equal(np.asarray(rep.outputs["x"]),
+                                  np.asarray(batch["x"]) * 2.0)
+
+
+def test_offload_engine_star_degenerate_splits():
+    topo = _star3()
+    eng = C.OffloadEngine(lambda b: b, topology=topo,
+                          payload_bytes_per_item=1e3)
+    batch = {"x": jnp.arange(6.0)[:, None]}
+    for fr in ((1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 1.0)):
+        rep = eng.run(batch, C.SplitVector(fr))
+        np.testing.assert_array_equal(np.asarray(rep.outputs["x"]),
+                                      np.asarray(batch["x"]))
+        assert sum(rep.n_group) == 6
+
+
+def test_offload_engine_scalar_split_requires_pair():
+    eng = C.OffloadEngine(lambda b: b, topology=_star3(),
+                          payload_bytes_per_item=1e3)
+    with pytest.raises(ValueError, match="SplitVector"):
+        eng.run({"x": jnp.ones((4, 1))}, 0.5)
+
+
+def test_offload_engine_raw_fractions_projected_to_simplex():
+    """A non-normalized raw fraction sequence must never over-allocate the
+    batch (regression: (0.5, 0.5, 0.5) used to yield counts (6, 6, 6) for
+    a 12-item batch)."""
+    eng = C.OffloadEngine(lambda b: b, topology=_star3(),
+                          payload_bytes_per_item=1e3)
+    batch = {"x": jnp.arange(12.0)[:, None]}
+    rep = eng.run(batch, (0.5, 0.5, 0.5))
+    assert rep.n_group == (4, 4, 4)
+    np.testing.assert_array_equal(np.asarray(rep.outputs["x"]),
+                                  np.asarray(batch["x"]))
+    with pytest.raises(ValueError, match="sum to zero"):
+        eng.run(batch, (0.0, 0.0, 0.0))
+    with pytest.raises(TypeError, match="exactly one"):
+        eng.run(batch)
+
+
+def test_offload_engine_pair_shim_token_identical(small_llama):
+    """Satellite: the deprecated positional 2-node constructor must be
+    token-identical to the topology-first path."""
+    cfg, params = small_llama
+
+    def task(batch):
+        return jnp.argmax(
+            M.forward(params, cfg, batch, mode="train").logits, axis=-1)
+
+    d = _dev()
+    pri = C.NodeGroup("pri", [d], C.JETSON_NANO)
+    aux = C.NodeGroup("aux", [d], C.JETSON_XAVIER)
+    legacy = C.OffloadEngine(task, pri, aux, C.WIFI_5GHZ,
+                             payload_bytes_per_item=1e3)
+    topo = C.OffloadEngine(task, topology=C.Topology.pair(pri, aux,
+                                                          C.WIFI_5GHZ),
+                           payload_bytes_per_item=1e3)
+    batch = {"tokens": np.arange(10 * 8).reshape(10, 8).astype(np.int32)
+             % cfg.vocab_size}
+    for r in (0.0, 0.5, 0.7, 1.0):
+        rl = legacy.run(batch, r)
+        rt = topo.run(batch, C.SplitVector.from_r(r))
+        assert (rl.n_local, rl.n_offloaded) == (rt.n_local, rt.n_offloaded)
+        np.testing.assert_array_equal(np.asarray(rl.outputs),
+                                      np.asarray(rt.outputs))
+    # legacy accessors still resolve through the topology
+    assert legacy.primary is pri and legacy.auxiliary is aux
+    assert legacy.link is C.WIFI_5GHZ
+
+
+# --- star SplitRatioController ---------------------------------------------
+def _star_report(counts, rates, links):
+    names = tuple(f"g{i}" for i in range(len(counts)))
+    t_group = tuple(c * r for c, r in zip(counts, rates))
+    t_link = (0.0,) + tuple(c * l for c, l in zip(counts[1:], links))
+    return C.OffloadReport(
+        r=1.0 - counts[0] / max(sum(counts), 1), n_local=counts[0],
+        n_offloaded=sum(counts[1:]), t_local_s=t_group[0],
+        t_remote_s=max(t_group[1:]), t_offload_s=max(t_link[1:]),
+        payload_bytes=0.0, e_offload_j=0.0, group_names=names,
+        n_group=tuple(counts), t_group_s=t_group, t_link_s=t_link)
+
+
+def test_star_controller_shifts_toward_faster_spokes():
+    ctl = C.SplitRatioController(C.ControllerConfig(update_every=1),
+                                 n_groups=3)
+    assert ctl.fractions == pytest.approx([1 / 3] * 3)
+    for _ in range(3):
+        ctl.observe(_star_report((4, 4, 4), rates=(0.4, 0.1, 0.05),
+                                 links=(0.01, 0.01)))
+    f = ctl.fractions
+    assert f[2] > f[1] > f[0], f          # fastest group takes the most
+    assert np.isclose(f.sum(), 1.0)
+    assert ctl.r == pytest.approx(1.0 - f[0])
+    assert ctl.history and "fractions" in ctl.history[-1].diagnostics
+
+
+def test_star_controller_split_counts_floor():
+    ctl = C.SplitRatioController(C.ControllerConfig(update_every=1),
+                                 n_groups=3)
+    for _ in range(2):
+        ctl.observe(_star_report((4, 4, 4), rates=(5.0, 0.01, 0.01),
+                                 links=(0.0, 0.0)))
+    counts = ctl.split_counts(9)
+    assert sum(counts) == 9
+    assert all(c >= 1 for c in counts)    # exploration floor: none dark
+    # tiny waves can't cover every group — they still partition exactly
+    assert sum(ctl.split_counts(2)) == 2
+
+
+def test_star_controller_requires_widened_report():
+    ctl = C.SplitRatioController(n_groups=3)
+    legacy = C.OffloadReport(r=0.5, n_local=2, n_offloaded=2, t_local_s=0.1,
+                             t_remote_s=0.1, t_offload_s=0.0,
+                             payload_bytes=0.0, e_offload_j=0.0)
+    with pytest.raises(ValueError, match="per-group"):
+        ctl.observe(legacy)
+
+
+def test_pair_controller_split_counts_matches_split():
+    ctl = C.SplitRatioController(C.ControllerConfig(update_every=1))
+    for n in (1, 2, 7, 16):
+        n_off = ctl.split(n)
+        assert ctl.split_counts(n) == (n - n_off, n_off)
+
+
+# --- star TaskScheduler ----------------------------------------------------
+def test_task_scheduler_star_decides_split_vector():
+    aux, pri, off = C.paper_profiles()
+    # second spoke: a 2x faster Xavier (half the exec time, same link)
+    aux2 = C.MeasuredProfile("xavier-2x")
+    off2 = C.MeasuredProfile("off-2x")
+    for s, o in zip(aux.samples, off.samples):
+        aux2.add(s.r, s.T / 2.0, s.P, s.M)
+        off2.add(o.r, o.T, o.P, o.M)
+    sched = C.TaskScheduler(
+        C.SchedulerConfig(solver_constraints=C.SolverConstraints(tau=68.34)),
+        aux, pri, off, extra_spokes=[(aux2, off2)])
+    assert sched.n_groups == 3
+    dec = sched.decide()
+    assert dec.reason == "solved-star"
+    assert dec.offload
+    assert isinstance(dec.split, C.SplitVector) and len(dec.split) == 3
+    f = dec.split.fractions
+    assert np.isclose(sum(f), 1.0)
+    assert f[2] > f[1]                    # faster spoke takes more work
+    assert dec.split_ratio == pytest.approx(1.0 - f[0])
+    assert sched.history[-1] is dec
+
+
+def test_task_scheduler_star_infeasible_falls_back_local():
+    """An impossible deadline must yield the paper's §VII-B fallback
+    (process locally) on the star path, like the pair path does."""
+    aux, pri, off = C.paper_profiles()
+    aux2 = C.MeasuredProfile("x2")
+    off2 = C.MeasuredProfile("o2")
+    for s, o in zip(aux.samples, off.samples):
+        aux2.add(s.r, s.T, s.P, s.M)
+        off2.add(o.r, o.T, o.P, o.M)
+    sched = C.TaskScheduler(
+        C.SchedulerConfig(solver_constraints=C.SolverConstraints(tau=0.01)),
+        aux, pri, off, extra_spokes=[(aux2, off2)])
+    dec = sched.decide()
+    assert not dec.offload and dec.split_ratio == 0.0
+    assert "infeasible" in dec.reason
+    assert dec.split.fractions == (1.0, 0.0, 0.0)
+
+
+def test_task_scheduler_topology_group_count_checked():
+    aux, pri, off = C.paper_profiles()
+    with pytest.raises(ValueError, match="groups"):
+        C.TaskScheduler(C.SchedulerConfig(), aux, pri, off,
+                        topology=_star3())
+
+
+# --- HeteroRuntime session -------------------------------------------------
+def _session_requests(cfg, n, rng, tasks=("a", "b"), prompt_len=8):
+    prompts = rng.integers(0, cfg.vocab_size, (n, prompt_len)).astype(np.int32)
+    return [ServeRequest(uid=i, prompt=prompts[i], max_new=1 + i % 4,
+                         task=tasks[i % len(tasks)]) for i in range(n)]
+
+
+def test_hetero_runtime_star_two_tasks_end_to_end(small_llama):
+    """Acceptance: 3-group star serves a mixed two-task stream end-to-end
+    with solve_star-derived SplitVectors, token streams bit-identical to
+    the direct continuous engines."""
+    cfg, params_a = small_llama
+    params_b = M.init_params(cfg, jax.random.PRNGKey(1))
+
+    rt = C.HeteroRuntime(_star3(), slots=2, max_len=32)
+    rt.add_task("a", cfg, params_a)
+    rt.add_task("b", cfg, params_b)
+    rng = np.random.default_rng(3)
+    reqs = _session_requests(cfg, 12, rng)
+    result = rt.serve(reqs)
+
+    assert {t: len(o) for t, o in result.outputs.items()} == {"a": 6, "b": 6}
+    # the live split came from solve_star (star controller re-solved)
+    assert rt.controller.n_groups == 3
+    assert rt.controller.history, "controller never re-solved the star"
+    assert all(len(h.diagnostics["fractions"]) == 3
+               for h in rt.controller.history)
+
+    # token streams bit-identical to driving the slot engines directly
+    for task, params in (("a", params_a), ("b", params_b)):
+        ref_eng = ContinuousServingEngine(cfg, params, slots=2, max_len=32)
+        refs, _ = ref_eng.run([r for r in reqs if r.task == task])
+        mine = {o.uid: o.tokens for o in result.outputs[task]}
+        assert len(refs) == len(mine)
+        for o in refs:
+            np.testing.assert_array_equal(mine[o.uid], o.tokens)
+
+
+def test_hetero_runtime_pair_bit_identical_to_pr1_wave_loop(small_llama):
+    """Acceptance: the 2-node path through the new session API reproduces
+    PR 1's continuous-batching token streams bit-identically.  The PR 1
+    loop is replayed verbatim: waves of 2*slots, aux takes chunk[:n_off],
+    pri the rest, one ContinuousServingEngine per group."""
+    cfg, params = small_llama
+    rng = np.random.default_rng(4)
+    reqs = _session_requests(cfg, 10, rng, tasks=("",))
+    slots, max_len, fixed_r = 2, 32, 0.5
+
+    # --- PR 1 reference loop ------------------------------------------
+    pri_eng = ContinuousServingEngine(cfg, params, slots=slots,
+                                      max_len=max_len)
+    aux_eng = ContinuousServingEngine(cfg, params, slots=slots,
+                                      max_len=max_len, share_from=pri_eng)
+    ref_tokens = {}
+    wave = 2 * slots
+    for lo in range(0, len(reqs), wave):
+        chunk = reqs[lo:lo + wave]
+        n_off = int(round(fixed_r * len(chunk)))
+        for eng, share in ((aux_eng, chunk[:n_off]), (pri_eng, chunk[n_off:])):
+            if share:
+                for o in eng.run(share)[0]:
+                    ref_tokens[o.uid] = o.tokens
+
+    # --- new session API ----------------------------------------------
+    d = _dev()
+    topo = C.Topology.pair(C.NodeGroup("pri", [d], C.JETSON_NANO),
+                           C.NodeGroup("aux", [d], C.JETSON_XAVIER),
+                           C.WIFI_5GHZ)
+    rt = C.HeteroRuntime(topo, slots=slots, max_len=max_len)
+    rt.add_task(cfg.name, cfg, params)
+    result = rt.serve(reqs, split=fixed_r, wave=wave)
+
+    mine = {o.uid: o.tokens for o in result.outputs[cfg.name]}
+    assert set(mine) == set(ref_tokens)
+    for uid, toks in ref_tokens.items():
+        np.testing.assert_array_equal(mine[uid], toks)
+    # and the wave partition itself matched PR 1's split_sizes counts
+    for w in result.telemetry["waves"]:
+        n_off, n_loc = split_sizes(w["n"], fixed_r)
+        assert w["counts"] == [n_loc, n_off]
+
+
+def test_hetero_runtime_task_routing_and_errors(small_llama):
+    cfg, params = small_llama
+    rt = C.HeteroRuntime(_star3(), slots=2, max_len=32)
+    with pytest.raises(RuntimeError, match="no tasks"):
+        rt.serve([ServeRequest(uid=0, prompt=np.ones(8, np.int32),
+                               max_new=1)])
+    rt.add_task("only", cfg, params)
+    with pytest.raises(ValueError, match="already registered"):
+        rt.add_task("only", cfg, params)
+    # untagged requests route to the sole task
+    reqs = _session_requests(cfg, 6, np.random.default_rng(5), tasks=("",))
+    result = rt.serve(reqs, split=(0.4, 0.3, 0.3))
+    assert len(result.outputs["only"]) == 6
+    # unknown task names are rejected
+    bad = [ServeRequest(uid=0, prompt=np.ones(8, np.int32), max_new=1,
+                        task="nope")]
+    with pytest.raises(KeyError, match="unregistered"):
+        rt.serve(bad)
+
+
+def test_hetero_runtime_telemetry_structured(small_llama):
+    cfg, params = small_llama
+    rt = C.HeteroRuntime(_star3(), slots=2, max_len=32)
+    rt.add_task("t", cfg, params)
+    reqs = _session_requests(cfg, 8, np.random.default_rng(6), tasks=("t",))
+    result = rt.serve(reqs, wave=4)
+
+    tel = json.loads(result.to_json())        # valid JSON end to end
+    assert tel["topology"] == "star"
+    assert tel["groups"] == ["hub", "s1", "s2"]
+    assert tel["tasks"] == ["t"]
+    assert tel["totals"]["requests"] == 8
+    assert tel["totals"]["tokens"] == sum(r.max_new for r in reqs)
+    assert len(tel["totals"]["final_split"]) == 3
+    assert len(tel["waves"]) == 2
+    for w in tel["waves"]:
+        assert sum(w["counts"]) == w["n"]
+        assert set(w["per_group"]) == {"hub", "s1", "s2"}
+        for g in w["per_group"].values():
+            assert {"n", "wall_s", "link_s", "tokens", "tasks"} <= set(g)
+        assert sum(g["n"] for g in w["per_group"].values()) == w["n"]
+
+
+def test_hetero_runtime_controller_size_checked():
+    with pytest.raises(ValueError, match="sized for"):
+        C.HeteroRuntime(_star3(),
+                        controller=C.SplitRatioController(n_groups=2))
+
+
+def test_hetero_runtime_task_max_new_caps_requests(small_llama):
+    cfg, params = small_llama
+    rt = C.HeteroRuntime(_star3(), slots=2, max_len=32)
+    rt.add_task("capped", cfg, params, max_new=2)
+    reqs = _session_requests(cfg, 4, np.random.default_rng(7),
+                             tasks=("capped",))
+    for r in reqs:
+        r.max_new = 5                  # above the task cap
+    result = rt.serve(reqs, split=(0.5, 0.25, 0.25))
+    assert all(len(o.tokens) == 2 for o in result.outputs["capped"])
+    assert all(r.max_new == 5 for r in reqs)   # never mutated
+
+
+def test_partition_devices_covers_every_device():
+    """Regression: an uneven device/nodes split must not strand devices."""
+    from repro.launch.serve import partition_devices
+    for n_dev in range(1, 12):
+        for nodes in (2, 3, 4):
+            devs = list(range(n_dev))
+            parts = partition_devices(devs, nodes)
+            assert len(parts) == nodes
+            assert all(parts)                       # no empty group
+            if n_dev >= nodes:
+                flat = [d for p in parts for d in p]
+                assert flat == devs                 # exact cover, in order
+    assert partition_devices([0, 1, 2, 3, 4], 2) == [[0, 1, 2], [3, 4]]
+    # fewer devices than groups: groups share device 0
+    assert partition_devices([0], 3) == [[0], [0], [0]]
