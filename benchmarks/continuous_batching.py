@@ -7,6 +7,10 @@ Reproduction targets:
 
   * continuous tokens/s >= static tokens/s on the mixed stream, at every
     split ratio in the sweep (the architectural claim of this runtime),
+  * the fused macro-step decode loop (PR 3) beats the pre-fusion per-token
+    host loop on the same stream with bit-identical tokens, its decode
+    host-sync count bounded by 1/K per token (``--json`` records the
+    measurements in BENCH_decode.json),
   * the async OffloadEngine reports a MEASURED overlapped makespan
     (t_parallel_s > 0) — all node groups dispatched before any await,
   * the HeteroRuntime session API (PR 2) drains the same stream through
@@ -15,6 +19,7 @@ Reproduction targets:
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -34,6 +39,8 @@ N_REQ = 16
 MAX_LEN = 40
 TRIALS = 5          # min-of-N walls: scheduling noise on shared hosts only
                     # ever inflates a wall, so the min is the cleanest read
+MACRO_K = 8         # fused decode tokens per dispatch in the fused section
+FUSED_SLOTS = 4     # wider batch so each macro-step amortizes over >K tokens
 
 
 def _requests(cfg, rng):
@@ -72,17 +79,131 @@ def _static_decode_steps(reqs) -> int:
                for lo in range(0, len(reqs), SLOTS))
 
 
-def main(emit_fn=emit):
+def _fused_generate_section(cfg, params, emit_fn) -> dict:
+    """The decode hot path in isolation: fused macro-step `generate`
+    (K tokens per dispatch, donated cache, device-side argmax) vs the
+    pre-PR per-token host loop on the SAME static batch.  No admission
+    churn, so the measured ratio is the pure per-token overhead removed
+    by fusion — this is the >= 1.3x acceptance gate."""
+    B, max_new = 4, 32
+    prompts = np.ones((B, PROMPT), np.int32)
+    per_step = ServingEngine(cfg, params, max_len=PROMPT + max_new + 8,
+                             macro_steps=0)
+    fused = ServingEngine(cfg, params, max_len=PROMPT + max_new + 8,
+                          macro_steps=MACRO_K)
+    ref = per_step.generate(prompts, max_new=max_new)      # warm + reference
+    out = fused.generate(prompts, max_new=max_new)
+    np.testing.assert_array_equal(out.tokens, ref.tokens)  # bit-identical
+    ps_best = fu_best = None
+    # shared CI hosts can hand one arm a noisy interval: re-measure (up to
+    # 3 attempts, interleaved best-of-TRIALS) before failing the 1.3x gate
+    for _attempt in range(3):
+        for _ in range(TRIALS):
+            r = per_step.generate(prompts, max_new=max_new)
+            if ps_best is None or r.tokens_per_s > ps_best.tokens_per_s:
+                ps_best = r
+            r = fused.generate(prompts, max_new=max_new)
+            if fu_best is None or r.tokens_per_s > fu_best.tokens_per_s:
+                fu_best = r
+        speedup = fu_best.tokens_per_s / max(ps_best.tokens_per_s, 1e-9)
+        if speedup >= 1.3:
+            break
+    emit_fn("continuous.generate_fused_tok_s", fu_best.decode_s * 1e6,
+            f"{fu_best.tokens_per_s:.1f}")
+    emit_fn("continuous.generate_fused_speedup", 0.0, f"{speedup:.2f}")
+    # the macro-stepped loop syncs once per K tokens (plus the prefill
+    # argmax); the per-step loop syncs every token
+    assert fu_best.host_syncs * MACRO_K <= ps_best.host_syncs + MACRO_K, \
+        (fu_best.host_syncs, ps_best.host_syncs)
+    assert speedup >= 1.3, \
+        f"fused decode < 1.3x over the per-step loop: {speedup:.2f}x"
+    return {
+        "batch": B, "max_new": max_new,
+        "per_step": {"tok_per_s": round(ps_best.tokens_per_s, 1),
+                     "decode_s": round(ps_best.decode_s, 4),
+                     "host_syncs": ps_best.host_syncs},
+        "fused": {"tok_per_s": round(fu_best.tokens_per_s, 1),
+                  "decode_s": round(fu_best.decode_s, 4),
+                  "host_syncs": fu_best.host_syncs,
+                  "t_per_macro_step_s": round(fu_best.t_per_macro_step_s, 5)},
+        "speedup": round(speedup, 2),
+    }
+
+
+def _fused_continuous_section(cfg, params, reqs, emit_fn) -> dict:
+    """Fused macro-step slot engine vs the pre-fusion per-token host loop
+    on the mixed stream: bit-identical tokens, deterministic host-sync
+    bounds.  Admission still happens at macro-step boundaries, so short
+    requests cost up to K-1 idle micro-steps — the wall gate is
+    structural (>= 1x); the static-batch section above carries the
+    headline ratio."""
+    per_step = ContinuousServingEngine(cfg, params, slots=FUSED_SLOTS,
+                                       max_len=MAX_LEN, macro_steps=0)
+    fused = ContinuousServingEngine(cfg, params, slots=FUSED_SLOTS,
+                                    max_len=MAX_LEN, macro_steps=MACRO_K,
+                                    share_from=per_step)
+    per_step.run(reqs[:4])          # warm every compile path on both arms
+    fused.run(reqs[:4])
+    ps_walls, fu_walls = [], []
+    ps_stats = fu_stats = None
+    for _ in range(TRIALS):
+        ref, ps_stats = per_step.run(reqs)
+        outs, fu_stats = fused.run(reqs)
+        ps_walls.append(ps_stats.prefill_s + ps_stats.decode_s)
+        fu_walls.append(fu_stats.prefill_s + fu_stats.decode_s)
+        for a, b in zip(ref, outs):   # fused tokens are bit-identical
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+    toks = fu_stats.total_tokens
+    ps_tps = toks / max(float(np.min(ps_walls)), 1e-9)
+    fu_tps = toks / max(float(np.min(fu_walls)), 1e-9)
+    speedup = fu_tps / max(ps_tps, 1e-9)
+    decode_syncs_per_tok = fu_stats.macro_dispatches / toks
+    # deterministic gates: the fused schedule fetches tokens once per
+    # macro-step, so decode-path syncs per token are bounded by 1/K
+    assert decode_syncs_per_tok <= 1.0 / MACRO_K, \
+        (fu_stats.macro_dispatches, toks, MACRO_K)
+    assert fu_stats.host_syncs < ps_stats.host_syncs, \
+        (fu_stats.host_syncs, ps_stats.host_syncs)
+    assert speedup >= 1.0, \
+        f"fused continuous slower than the per-step loop: {speedup:.2f}x"
+    emit_fn("continuous.fused_tok_s", float(np.min(fu_walls)) * 1e6,
+            f"{fu_tps:.1f}")
+    emit_fn("continuous.fused_speedup_vs_per_step", 0.0, f"{speedup:.2f}")
+    emit_fn("continuous.fused_host_syncs", 0.0,
+            f"{fu_stats.host_syncs}v{ps_stats.host_syncs}")
+    return {
+        "slots": FUSED_SLOTS, "requests": len(reqs), "tokens": toks,
+        "per_step": {"tok_per_s": round(ps_tps, 1),
+                     "host_syncs": ps_stats.host_syncs,
+                     "decode_steps": ps_stats.decode_steps,
+                     "wall_s": round(float(np.min(ps_walls)), 4)},
+        "fused": {"tok_per_s": round(fu_tps, 1),
+                  "host_syncs": fu_stats.host_syncs,
+                  "macro_dispatches": fu_stats.macro_dispatches,
+                  "t_per_macro_step_s": round(fu_stats.t_per_macro_step_s, 5),
+                  "wall_s": round(float(np.min(fu_walls)), 4)},
+        "speedup": round(speedup, 2),
+        "decode_host_syncs_per_token": round(decode_syncs_per_tok, 4),
+        "host_syncs_per_token": round(fu_stats.host_syncs / toks, 4),
+    }
+
+
+def main(emit_fn=emit, json_path=None):
     cfg = reduced(get_config("llama3.2-1b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     reqs = _requests(cfg, rng)
 
-    static_eng = ServingEngine(cfg, params, max_len=MAX_LEN)
+    # the r sweep isolates the ARCHITECTURAL claim (slots vs static
+    # batching), so both arms run the same per-token loop (macro_steps=0)
+    # with its pre-fusion schedule and decode-step counting; the fused
+    # K>0 path is gated separately in the _fused_* sections below
+    static_eng = ServingEngine(cfg, params, max_len=MAX_LEN, macro_steps=0)
     cont_pri = ContinuousServingEngine(cfg, params, slots=SLOTS,
-                                       max_len=MAX_LEN)
+                                       max_len=MAX_LEN, macro_steps=0)
     cont_aux = ContinuousServingEngine(cfg, params, slots=SLOTS,
-                                       max_len=MAX_LEN, share_from=cont_pri)
+                                       max_len=MAX_LEN, macro_steps=0,
+                                       share_from=cont_pri)
     # warm every compile path (B=SLOTS prefill/decode, B=1 prefill)
     _run_static(static_eng, reqs[:SLOTS])
     _run_continuous(cont_pri, reqs[:2])
@@ -127,6 +248,18 @@ def main(emit_fn=emit):
     assert speedup >= 0.9, \
         f"continuous batching slower than static: {speedup:.2f}x"
 
+    # --- fused macro-step decode vs the pre-fusion loop (PR 3) ----------
+    record = {
+        "bench": "decode_fused", "arch": cfg.name, "macro_steps": MACRO_K,
+        "generate": _fused_generate_section(cfg, params, emit_fn),
+        "continuous": _fused_continuous_section(cfg, params, reqs, emit_fn),
+    }
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(record, fh, indent=2)
+            fh.write("\n")
+        print(f"decode bench -> {json_path}")
+
     # --- measured overlapped dispatch (async OffloadEngine) -------------
     def fwd(batch):
         return M.forward(params, cfg, batch, mode="train").logits
@@ -159,8 +292,16 @@ def main(emit_fn=emit):
     emit_fn("continuous.runtime_pair_tok_s", 0.0,
             f"{tel['totals']['tok_per_s']:.1f}")
     emit_fn("continuous.runtime_pair_waves", 0.0, len(tel["waves"]))
+    emit_fn("continuous.runtime_pair_syncs_per_tok", 0.0,
+            f"{tel['totals']['host_syncs_per_token']:.3f}")
     return worst_ratio
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the fused-decode record here "
+                         "(e.g. BENCH_decode.json)")
+    args = ap.parse_args()
+    main(json_path=args.json)

@@ -28,6 +28,10 @@ def main(emit_fn=emit):
         res = eng.generate(np.ones((8, 16), np.int32), max_new=8)
         emit_fn(f"serve.{arch}.tokens_per_s", res.decode_s * 1e6 / 7,
                 f"{res.tokens_per_s:.0f}")
+        # fused macro-step accounting (PR 3): one host sync per dispatch
+        emit_fn(f"serve.{arch}.host_syncs", 0.0, f"{res.host_syncs}")
+        emit_fn(f"serve.{arch}.t_per_macro_step_ms", 0.0,
+                f"{res.t_per_macro_step_s * 1e3:.2f}")
         results[arch] = res.tokens_per_s
 
     # --- r sweep through the offload engine (forward task) --------------

@@ -106,6 +106,11 @@ class OffloadReport:
     n_group: Tuple[int, ...] = ()
     t_group_s: Tuple[float, ...] = ()   # per-group completion since dispatch
     t_link_s: Tuple[float, ...] = ()    # per-edge link latency (hub entry 0.0)
+    # --- fused-decode accounting (PR 3) -----------------------------------
+    host_syncs: int = 0         # device→host materializations this batch:
+                                # one await per dispatched group here; the
+                                # serving engines report one per macro-step
+                                # + one per admission phase
 
     @property
     def t_parallel(self) -> float:
@@ -354,7 +359,8 @@ class OffloadEngine:
             e_offload_j=sum(e_link), outputs=merged, t_parallel_s=t_par,
             group_names=tuple(g.name for g in groups),
             n_group=tuple(counts), t_group_s=tuple(t_group),
-            t_link_s=tuple(t_link))
+            t_link_s=tuple(t_link),
+            host_syncs=sum(1 for g in range(G) if counts[g]))
 
 
 # ---------------------------------------------------------------------------

@@ -191,12 +191,14 @@ class HeteroRuntime:
     """
 
     def __init__(self, topology: Topology, *, slots: int = 4,
-                 max_len: int = 64,
+                 max_len: int = 64, macro_steps: int = 8,
                  controller: Optional[SplitRatioController] = None,
                  link_distance: float = 1.0):
         self.topology = topology
         self.slots = slots
         self.max_len = max_len
+        self.macro_steps = macro_steps   # fused decode tokens per dispatch
+                                         # (0 = pre-fusion per-token loop)
         self.link_distance = link_distance
         self.controller = controller or SplitRatioController(
             ControllerConfig(update_every=2), n_groups=len(topology))
@@ -222,7 +224,9 @@ class HeteroRuntime:
         first: Optional[ContinuousServingEngine] = None
         for grp in self.topology.groups:
             eng = ContinuousServingEngine(cfg, params, slots=self.slots,
-                                          max_len=ml, share_from=first)
+                                          max_len=ml,
+                                          macro_steps=self.macro_steps,
+                                          share_from=first)
             engines[grp.name] = eng
             first = first or eng
         payload = payload_bytes_per_item
@@ -303,6 +307,9 @@ class HeteroRuntime:
         outputs: Dict[str, List[RequestOutput]] = {t: [] for t in self.tasks}
         waves_tel: List[dict] = []
         total_tokens = 0
+        total_syncs = 0
+        total_decode_s = 0.0
+        total_dispatches = 0
         done = 0
         t_start = time.perf_counter()
         while done < len(requests):
@@ -323,6 +330,9 @@ class HeteroRuntime:
             t_group = [0.0] * G
             t_link = [0.0] * G
             toks_group = [0] * G
+            syncs_group = [0] * G
+            decode_s_group = [0.0] * G
+            dispatches_group = [0] * G
             t0 = time.perf_counter()
             for g, grp in enumerate(self.topology.groups):
                 share = shares[g]
@@ -333,11 +343,14 @@ class HeteroRuntime:
                 payload = 0.0
                 for task, reqs_t in by_task.items():
                     spec = self.tasks[task]
-                    outs, _ = spec.engines[grp.name].run(
+                    outs, st = spec.engines[grp.name].run(
                         self._capped(spec, reqs_t))
                     outputs[task].extend(outs)
                     toks_group[g] += sum(len(o.tokens) for o in outs)
                     payload += len(reqs_t) * spec.payload_bytes_per_item
+                    syncs_group[g] += st.host_syncs
+                    decode_s_group[g] += st.decode_s
+                    dispatches_group[g] += st.macro_dispatches
                 t_group[g] = time.perf_counter() - tg0
                 if g > 0 and share:
                     t_link[g] = float(offload_latency(
@@ -345,9 +358,15 @@ class HeteroRuntime:
                 per_group[grp.name] = {
                     "n": len(share), "wall_s": t_group[g],
                     "link_s": t_link[g], "tokens": toks_group[g],
+                    "host_syncs": syncs_group[g],
+                    "t_per_macro_step_s": decode_s_group[g]
+                    / dispatches_group[g] if dispatches_group[g] else 0.0,
                     "tasks": {t: len(r) for t, r in by_task.items()}}
             wall = time.perf_counter() - t0
             total_tokens += sum(toks_group)
+            total_syncs += sum(syncs_group)
+            total_decode_s += sum(decode_s_group)
+            total_dispatches += sum(dispatches_group)
 
             rep = OffloadReport(
                 r=sv.r, n_local=counts[0],
@@ -358,14 +377,15 @@ class HeteroRuntime:
                 payload_bytes=0.0, e_offload_j=0.0,
                 group_names=tuple(g.name for g in self.topology.groups),
                 n_group=tuple(counts), t_group_s=tuple(t_group),
-                t_link_s=tuple(t_link))
+                t_link_s=tuple(t_link), host_syncs=sum(syncs_group))
             if split is None:
                 self.controller.observe(rep)
             waves_tel.append({
                 "wave": len(waves_tel), "n": len(chunk),
                 "split": [round(float(f), 4) for f in sv.fractions],
                 "counts": [int(c) for c in counts], "wall_s": wall,
-                "tokens": sum(toks_group), "per_group": per_group})
+                "tokens": sum(toks_group),
+                "host_syncs": sum(syncs_group), "per_group": per_group})
             if verbose:
                 counts_str = "/".join(str(c) for c in counts)
                 print(f"wave {len(waves_tel) - 1}: {len(chunk):2d} reqs "
@@ -380,12 +400,17 @@ class HeteroRuntime:
             "topology": self.topology.kind,
             "groups": [g.name for g in self.topology.groups],
             "slots": self.slots,
+            "macro_steps": self.macro_steps,
             "tasks": sorted(self.tasks),
             "waves": waves_tel,
             "totals": {
                 "requests": len(requests), "tokens": total_tokens,
                 "wall_s": wall_total,
                 "tok_per_s": total_tokens / max(wall_total, 1e-9),
+                "host_syncs": total_syncs,
+                "host_syncs_per_token": total_syncs / max(total_tokens, 1),
+                "t_per_macro_step_s": total_decode_s / total_dispatches
+                if total_dispatches else 0.0,
                 "final_split": [round(float(f), 4) for f in (
                     self.controller.fractions if split is None
                     else self._split_for(max(len(requests), 1),

@@ -13,12 +13,25 @@ cache_len arrives as a [B] int32 array (per-sequence valid length);
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def auto_interpret() -> bool:
+    """Backend probe ONLY: compile the kernel on a real TPU, interpret
+    everywhere else (CPU/GPU have no Mosaic backend).  This deliberately
+    ignores ``REPRO_PALLAS_INTERPRET`` — ``repro.kernels.ops
+    .default_interpret`` layers that env override on top and is what the
+    jitted public wrappers consult."""
+    try:
+        return jax.default_backend() != "tpu"
+    except RuntimeError:
+        return True
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
@@ -61,9 +74,12 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
 
 def decode_attention_pallas(q, k_cache, v_cache, cache_len, *,
                             window: int = 0, s_block: int = 512,
-                            interpret: bool = True):
+                            interpret: Optional[bool] = None):
     """q: [B,1,H,dh]; caches: [B,S,Hkv,dh]; cache_len: [B] or scalar.
-    Returns [B,1,H,dh] (v dtype).  Matches ref.decode_attention_ref."""
+    Returns [B,1,H,dh] (v dtype).  Matches ref.decode_attention_ref.
+    ``interpret=None`` auto-detects: compiled on TPU, interpreted off it."""
+    if interpret is None:
+        interpret = auto_interpret()
     B, _, H, dh = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv

@@ -1,8 +1,10 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True (this container is CPU-only; interpret mode
-executes the kernel body in Python for correctness).  On a real TPU set
-``REPRO_PALLAS_INTERPRET=0`` to run the compiled kernels.
+``interpret`` is auto-detected per backend: on a real TPU the kernels
+compile through Mosaic; everywhere else (CPU CI, GPU) they run in
+interpreter mode for correctness.  ``REPRO_PALLAS_INTERPRET=0/1``
+overrides the detection either way (e.g. force-interpret on a TPU while
+debugging a kernel).
 """
 from __future__ import annotations
 
@@ -11,29 +13,38 @@ import os
 
 import jax
 
-_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+def default_interpret() -> bool:
+    """Env override first, then backend auto-detection (TPU → compiled)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    from repro.kernels.decode_attention import auto_interpret
+    return auto_interpret()
 
 
 @functools.partial(jax.jit, static_argnums=(2,))
 def masked_compact(tokens, mask, capacity: int):
     from repro.kernels.masked_compact import masked_compact_pallas
-    return masked_compact_pallas(tokens, mask, capacity, interpret=_INTERPRET)
+    return masked_compact_pallas(tokens, mask, capacity,
+                                 interpret=default_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("window",))
 def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     from repro.kernels.decode_attention import decode_attention_pallas
     return decode_attention_pallas(q, k_cache, v_cache, cache_len,
-                                   window=window, interpret=_INTERPRET)
+                                   window=window,
+                                   interpret=default_interpret())
 
 
 @jax.jit
 def ssm_scan(decay, bx, h0):
     from repro.kernels.ssm_scan import ssm_scan_pallas
-    return ssm_scan_pallas(decay, bx, h0, interpret=_INTERPRET)
+    return ssm_scan_pallas(decay, bx, h0, interpret=default_interpret())
 
 
 @jax.jit
 def grouped_ffn(buf, wg, wu, wd):
     from repro.kernels.grouped_ffn import grouped_ffn_pallas
-    return grouped_ffn_pallas(buf, wg, wu, wd, interpret=_INTERPRET)
+    return grouped_ffn_pallas(buf, wg, wu, wd, interpret=default_interpret())

@@ -153,9 +153,11 @@ def lower_one(cfg: ModelConfig, shape: InputShape, mesh, *,
             lowered = fn.lower(p_abs, batch_abs)
         return lowered, {"mode": "prefill"}
 
-    # decode
+    # decode — pin the XLA reference path: the Pallas kernel is exercised
+    # by the engines, not by the sharded lowering artifact ("auto" would
+    # trace it into the HLO on a TPU host)
     b_shard = data_shardings(batch_abs, mesh)
-    step = make_serve_step(cfg)
+    step = make_serve_step(cfg, use_pallas=False)
     args_abs = (p_abs, batch_abs["cache"], batch_abs["token"],
                 batch_abs["cache_index"])
     out_abs = jax.eval_shape(step, *args_abs)

@@ -2,8 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto] \
-        [--continuous] [--slots 4] [--topology pair|star] [--nodes N] \
-        [--telemetry-json out.json]
+        [--continuous] [--slots 4] [--macro-steps 8] \
+        [--topology pair|star] [--nodes N] [--telemetry-json out.json]
 
 Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
 loop: profile a calibration batch, fit, solve for the split, then divide
@@ -92,7 +92,7 @@ def build_topology(kind: str, nodes: int) -> C.Topology:
 
 
 def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
-                     slots: int, split: str,
+                     slots: int, split: str, macro_steps: int = 8,
                      topology: Optional[C.Topology] = None,
                      link=None, telemetry_path: Optional[str] = None
                      ) -> C.ServeResult:
@@ -111,7 +111,8 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                               kind=topology.kind)
     offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
     max_len = prompt_len + offset + max_new + 8
-    runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len)
+    runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len,
+                              macro_steps=macro_steps)
     runtime.add_task(cfg.name, cfg, params,
                      max_new=max_new,
                      payload_bytes_per_item=prompt_len * cfg.d_model * 2)
@@ -132,7 +133,9 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
     print(f"continuous[{topology.kind}]: {tot['requests']} requests, "
           f"{tot['tokens']} tokens in {tot['wall_s']:.2f}s "
           f"({tot['tok_per_s']:.1f} tok/s), "
-          f"final split={tot['final_split']}")
+          f"final split={tot['final_split']}, "
+          f"{tot['host_syncs']} host syncs "
+          f"({tot['host_syncs_per_token']:.3f}/token, K={macro_steps})")
     if telemetry_path:
         with open(telemetry_path, "w") as fh:
             fh.write(result.to_json(indent=2))
@@ -154,6 +157,9 @@ def main():
                     help="slot-based continuous batching runtime")
     ap.add_argument("--slots", type=int, default=4,
                     help="KV-cache slots per node group (continuous mode)")
+    ap.add_argument("--macro-steps", type=int, default=8,
+                    help="fused decode tokens per dispatch (0 = pre-fusion "
+                         "per-token loop)")
     ap.add_argument("--topology", choices=("pair", "star"), default="pair",
                     help="2-node pair (paper) or §VIII star")
     ap.add_argument("--nodes", type=int, default=None,
@@ -182,7 +188,8 @@ def main():
     if args.continuous:
         serve_continuous(cfg, params, reqs, prompt_len=P,
                          max_new=args.max_new, slots=args.slots,
-                         split=args.split, topology=topology,
+                         split=args.split, macro_steps=args.macro_steps,
+                         topology=topology,
                          telemetry_path=args.telemetry_json)
         return
 
@@ -193,7 +200,8 @@ def main():
         batch["frontend"] = np.stack([r.frontend for r in reqs])
 
     def serve_task(b):
-        eng = ServingEngine(cfg, params, max_len=P + args.max_new + 8)
+        eng = ServingEngine(cfg, params, max_len=P + args.max_new + 8,
+                            macro_steps=args.macro_steps)
         return eng.generate(np.asarray(b["tokens"]),
                             max_new=args.max_new,
                             frontend=b.get("frontend")).tokens

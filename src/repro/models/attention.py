@@ -303,9 +303,9 @@ def attn_apply(params, x, cfg, *, positions, mode: str,
         return y, new_cache
     k_cache = cache_update(cache["k"], k.astype(cache["k"].dtype), cache_index)
     v_cache = cache_update(cache["v"], v.astype(cache["v"].dtype), cache_index)
-    # the Pallas decode kernel takes a scalar cache length; per-slot
-    # (vector) indices route through the reference path
-    if use_pallas and jnp.ndim(cache_index) == 0:
+    # the Pallas decode kernel takes a scalar OR per-slot [B] cache length
+    # (continuous batching), so both index shapes ride the TPU hot path
+    if use_pallas:
         from repro.kernels.ops import decode_attention as _dec
         out = _dec(q, k_cache, v_cache, cache_index + 1, window=cfg.sliding_window)
     else:

@@ -2,31 +2,54 @@
 
 ``make_prefill_step`` / ``make_serve_step`` return the pure functions the
 dry-run lowers (prefill_32k → prefill_step; decode shapes → serve_step:
-ONE new token against a seq_len cache).  ``ServingEngine`` wraps them into
-a batched greedy-decoding loop and plugs into the HeteroEdge
-``OffloadEngine`` as the task function for the collaborative-serving
-examples.
+ONE new token against a seq_len cache).  ``make_decode_loop`` is the fused
+serving hot path: a single jitted ``lax.scan`` that advances every slot
+``macro_steps`` tokens per dispatch with greedy sampling, per-slot length
+bookkeeping and eos detection all on device — the host fetches one
+``[K, B]`` token block per macro-step instead of syncing per token, and
+``donate_argnums`` lets XLA update the multi-GiB KV cache in place instead
+of copying it every token.
+
+``ServingEngine`` wraps them into a batched greedy-decoding loop and plugs
+into the HeteroEdge ``OffloadEngine`` as the task function for the
+collaborative-serving examples.
 
 ``ContinuousServingEngine`` is the slot-based continuous-batching runtime:
-a request queue feeds a fixed number of KV-cache slots; each decode step
-advances every occupied slot with per-slot cache indices (vector
+a request queue feeds a fixed number of KV-cache slots; each macro-step
+advances every occupied slot K tokens with per-slot cache indices (vector
 ``cache_index`` through the model's decode path), finished requests are
-evicted and their slots immediately re-admitted from the queue.  Static
-batching is throughput-bound by the slowest request of the batch; slots
-are not.
+evicted and their slots re-admitted from the queue at macro-step
+boundaries.  Token streams are bit-identical to the per-step loop
+(``macro_steps=0`` keeps the pre-fusion host loop for A/B benchmarking):
+slots only attend to their own positions, so a finished slot decoding junk
+until the next boundary cannot perturb any live slot.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+
+def resolve_use_pallas(use_pallas: Union[bool, str]) -> bool:
+    """Resolve a ``use_pallas`` flag: "auto" enables the Pallas decode
+    kernel exactly when a compiled TPU backend is available (off-TPU the
+    kernel would run interpreted — orders of magnitude slower than the
+    XLA reference path).  The single backend probe lives in
+    ``repro.kernels.decode_attention.auto_interpret``; the
+    ``REPRO_PALLAS_INTERPRET`` env var does NOT change engine routing —
+    it only picks interpret-vs-compile for kernels that DO run."""
+    if use_pallas == "auto":
+        from repro.kernels.decode_attention import auto_interpret
+        return not auto_interpret()
+    return bool(use_pallas)
 
 
 def make_prefill_step(cfg, *, use_pallas: bool = False):
@@ -37,8 +60,10 @@ def make_prefill_step(cfg, *, use_pallas: bool = False):
     return prefill_step
 
 
-def make_serve_step(cfg, *, use_pallas: bool = False):
+def make_serve_step(cfg, *, use_pallas: Union[bool, str] = "auto"):
     """(params, cache, token [B,1], cache_index) -> (logits [B,V], cache)."""
+    use_pallas = resolve_use_pallas(use_pallas)
+
     def serve_step(params, cache, token, cache_index):
         out = M.forward(params, cfg,
                         {"token": token, "cache": cache,
@@ -46,6 +71,68 @@ def make_serve_step(cfg, *, use_pallas: bool = False):
                         mode="decode", use_pallas=use_pallas)
         return out.logits[:, 0], out.cache
     return serve_step
+
+
+def make_decode_loop(cfg, *, macro_steps: int, eos_id: Optional[int] = None,
+                     use_pallas: Union[bool, str] = "auto"):
+    """Fused K-token decode: one traced program per macro-step.
+
+    ``(params, cache, cur_tok [B], lengths [B], remaining [B], done [B])
+    -> (tokens [K, B], cache, cur_tok, lengths, remaining, done)``
+
+    Each scan iteration runs one decode step for every slot, takes the
+    greedy argmax ON DEVICE, and advances only the slots that are still
+    live: a slot freezes (lengths/cur_tok/remaining stop moving) the step
+    it emits its ``remaining``-th token or ``eos_id``.  Frozen and free
+    slots keep executing the model with junk inputs — their cache rows are
+    isolated by the per-slot length masks, so live slots' token streams are
+    bit-identical to the per-step loop.  Jit this with
+    ``donate_argnums=(1, 2, 3, 4, 5)`` so the cache and the decode state
+    are updated in place (the caller must treat the donated arguments as
+    consumed and only ever use the returned arrays).
+    """
+    use_pallas = resolve_use_pallas(use_pallas)
+    eos = -1 if eos_id is None else int(eos_id)
+
+    def decode_loop(params, cache, cur_tok, lengths, remaining, done):
+        def body(carry, _):
+            cache, tok, lengths, remaining, done = carry
+            out = M.forward(params, cfg,
+                            {"token": tok[:, None], "cache": cache,
+                             "cache_index": lengths},
+                            mode="decode", use_pallas=use_pallas)
+            new_tok = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+            active = jnp.logical_not(done)
+            tok = jnp.where(active, new_tok, tok)
+            lengths = lengths + active
+            remaining = remaining - active
+            done = done | (active & ((remaining <= 0) | (tok == eos)))
+            return (out.cache, tok, lengths, remaining, done), tok
+
+        carry, toks = jax.lax.scan(
+            body, (cache, cur_tok, lengths, remaining, done), None,
+            length=macro_steps)
+        cache, cur_tok, lengths, remaining, done = carry
+        return toks, cache, cur_tok, lengths, remaining, done
+
+    return decode_loop
+
+
+# ---------------------------------------------------------------------------
+def _loop_program(cfg, loops: Dict, K: int, eos_id: Optional[int],
+                  use_pallas: bool):
+    """Fetch-or-build the jitted fused loop for (K, eos_id) in ``loops``
+    (a cache shared across sibling engines via ``share_from``).  Donation
+    covers the cache and all four decode-state vectors."""
+    key = (K, eos_id)
+    fn = loops.get(key)
+    if fn is None:
+        fn = jax.jit(
+            make_decode_loop(cfg, macro_steps=K, eos_id=eos_id,
+                             use_pallas=use_pallas),
+            donate_argnums=(1, 2, 3, 4, 5))
+        loops[key] = fn
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -101,16 +188,37 @@ class GenerationResult:
     prefill_s: float
     decode_s: float
     tokens_per_s: float
+    host_syncs: int = 0           # device→host materializations
+    t_per_macro_step_s: float = 0.0   # decode wall per fused dispatch (0.0
+                                      # on the per-step macro_steps=0 path)
 
 
 class ServingEngine:
-    """Batched greedy generation with a fixed-capacity KV/SSM cache."""
+    """Batched greedy generation with a fixed-capacity KV/SSM cache.
+
+    ``macro_steps=K`` (default 8) runs decoding as fused K-token dispatches
+    via :func:`make_decode_loop` with the cache donated in place;
+    ``macro_steps=0`` keeps the pre-fusion per-token host loop (one host
+    sync per token) for A/B comparison.  Both emit identical tokens."""
 
     def __init__(self, cfg, params, *, max_len: int = 512,
-                 use_pallas: bool = False):
+                 use_pallas: Union[bool, str] = "auto",
+                 macro_steps: int = 8):
         self.cfg, self.params, self.max_len = cfg, params, max_len
-        self.prefill = jax.jit(make_prefill_step(cfg, use_pallas=use_pallas))
-        self.step = jax.jit(make_serve_step(cfg, use_pallas=use_pallas))
+        self.macro_steps = int(macro_steps)
+        self._use_pallas = resolve_use_pallas(use_pallas)
+        self.prefill = jax.jit(
+            make_prefill_step(cfg, use_pallas=self._use_pallas))
+        # the per-step program donates its cache argument too: even the
+        # legacy loop updates the KV buffers in place
+        self.step = jax.jit(
+            make_serve_step(cfg, use_pallas=self._use_pallas),
+            donate_argnums=(1,))
+        self._loops: Dict[Tuple[int, Optional[int]], Any] = {}
+
+    def _get_loop(self, K: int, eos_id: Optional[int] = None):
+        return _loop_program(self.cfg, self._loops, K, eos_id,
+                             self._use_pallas)
 
     def generate(self, prompts: np.ndarray, max_new: int = 16,
                  frontend: Optional[np.ndarray] = None) -> GenerationResult:
@@ -130,21 +238,59 @@ class ServingEngine:
         cache = M.init_cache(cfg, B, total, dtype=cfg.jnp_dtype)
         cache = seed_cache(cfg, cache, pre_cache, P + offset)
 
+        if self.macro_steps == 0:
+            return self._generate_per_step(last_logits, cache, P + offset,
+                                           max_new, t_prefill)
+
+        K = self.macro_steps
+        loop = self._get_loop(K)
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        lengths = jnp.full((B,), P + offset, jnp.int32)
+        remaining = jnp.full((B,), max_new - 1, jnp.int32)
+        done = remaining <= 0
+        out_toks = [np.asarray(tok)[:, None]]
+        host_syncs = 1
+        dispatches = 0
+        need = max_new - 1
+        t0 = time.perf_counter()
+        while need > 0:
+            toks, cache, tok, lengths, remaining, done = loop(
+                self.params, cache, tok, lengths, remaining, done)
+            t = np.asarray(toks)          # the macro-step's ONE host sync
+            host_syncs += 1
+            dispatches += 1
+            take = min(need, K)
+            out_toks.append(t[:take].T)
+            need -= take
+        t_decode = time.perf_counter() - t0
+        toks = np.concatenate(out_toks, axis=1)
+        return GenerationResult(
+            tokens=toks, prefill_s=t_prefill, decode_s=t_decode,
+            tokens_per_s=B * max_new / max(t_decode + t_prefill, 1e-9),
+            host_syncs=host_syncs,
+            t_per_macro_step_s=t_decode / max(dispatches, 1))
+
+    def _generate_per_step(self, last_logits, cache, idx: int, max_new: int,
+                           t_prefill: float) -> GenerationResult:
+        """Pre-fusion host loop: one dispatch + one host sync per token."""
+        B = last_logits.shape[0]
         tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
         out_toks = [np.asarray(tok)]
-        idx = P + offset
+        host_syncs = 1
         t0 = time.perf_counter()
         for _ in range(max_new - 1):
             logits, cache = self.step(self.params, cache, tok, jnp.int32(idx))
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out_toks.append(np.asarray(tok))
+            host_syncs += 1
             idx += 1
         jax.block_until_ready(tok)
         t_decode = time.perf_counter() - t0
         toks = np.concatenate(out_toks, axis=1)
         return GenerationResult(
             tokens=toks, prefill_s=t_prefill, decode_s=t_decode,
-            tokens_per_s=B * max_new / max(t_decode + t_prefill, 1e-9))
+            tokens_per_s=B * max_new / max(t_decode + t_prefill, 1e-9),
+            host_syncs=host_syncs)
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +341,11 @@ class ContinuousStats:
     decode_s: float
     tokens_per_s: float
     occupancy: float                   # mean fraction of busy slots per step
+    host_syncs: int = 0                # device→host materializations (one
+                                       # per macro-step + one per admission
+                                       # phase; per-token when macro_steps=0)
+    macro_dispatches: int = 0          # fused decode-loop invocations
+    t_per_macro_step_s: float = 0.0    # decode wall per fused dispatch
 
 
 @dataclass
@@ -203,6 +354,8 @@ class _Slot:
     remaining: int = 0
     tokens: List[int] = field(default_factory=list)
     admitted_step: int = 0
+    finished_at: int = -1              # micro-step the last token landed on
+                                       # (eviction may lag to the boundary)
 
     @property
     def busy(self) -> bool:
@@ -213,40 +366,67 @@ class ContinuousServingEngine:
     """Slot-based continuous batching with greedy decoding.
 
     Fixed `slots`-wide decode batch; requests are admitted into free slots
-    (B=1 prefill written into the slot's cache region), every decode step
-    advances all slots with per-slot cache indices, and requests are
-    evicted the step they emit their last token (eos or max_new), freeing
-    the slot for the next queued request.  Token streams are bit-identical
-    to static batching because each slot attends only to its own
-    positions 0..len-1 (per-slot length masks).
+    (B=1 prefill written into the slot's cache region), every macro-step
+    advances all slots up to ``macro_steps`` tokens with per-slot cache
+    indices, and finished requests are evicted at the next macro-step
+    boundary (lagging their final token by at most ``macro_steps - 1``
+    micro-steps), freeing the slot for the next queued request.  Token
+    streams are bit-identical to static batching and to the per-step loop
+    because each slot attends only to its own positions 0..len-1 (per-slot
+    length masks) — a frozen slot decoding junk until the boundary cannot
+    leak into live slots.
+
+    The decode state (``cur_tok`` / ``lengths`` / ``remaining`` / ``done``)
+    is device-resident across macro-steps; the host fetches exactly one
+    ``[K, slots]`` token block per macro-step and one batched first-token
+    block per admission phase.  All decode-path programs donate their cache
+    (and state) arguments, so the KV buffers are updated in place.
+    ``macro_steps=0`` preserves the pre-fusion per-token host loop for A/B
+    benchmarking.
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
-                 use_pallas: bool = False, eos_id: Optional[int] = None,
+                 use_pallas: Union[bool, str] = "auto",
+                 eos_id: Optional[int] = None,
+                 macro_steps: int = 8,
                  share_from: Optional["ContinuousServingEngine"] = None):
         """`share_from`: another engine over the SAME cfg whose jitted
-        prefill/step/slot-write programs this one reuses — jax.jit caches
-        per function object, so sibling node-group engines would otherwise
-        recompile byte-identical programs."""
+        prefill/step/slot-write/decode-loop programs this one reuses —
+        jax.jit caches per function object, so sibling node-group engines
+        would otherwise recompile byte-identical programs."""
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+        self.macro_steps = int(macro_steps)
+        self._use_pallas = resolve_use_pallas(use_pallas)
         if share_from is not None and share_from.cfg is cfg:
             self.prefill = share_from.prefill
             self.step = share_from.step
             self._write_slot = share_from._write_slot
+            self._loops = share_from._loops
         else:
-            self.prefill = jax.jit(make_prefill_step(cfg, use_pallas=use_pallas))
-            self.step = jax.jit(make_serve_step(cfg, use_pallas=use_pallas))
+            self.prefill = jax.jit(
+                make_prefill_step(cfg, use_pallas=self._use_pallas))
+            self.step = jax.jit(
+                make_serve_step(cfg, use_pallas=self._use_pallas),
+                donate_argnums=(1,))
             self._write_slot = jax.jit(
-                lambda big, pre, slot: write_slot_cache(cfg, big, pre, slot))
+                lambda big, pre, slot: write_slot_cache(cfg, big, pre, slot),
+                donate_argnums=(0,))
+            self._loops: Dict[Tuple[int, Optional[int]], Any] = {}
         self._offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
 
+    def _get_loop(self, K: int):
+        return _loop_program(self.cfg, self._loops, K, self.eos_id,
+                             self._use_pallas)
+
     # ------------------------------------------------------------------
-    def _admit_free_slots(self, pending, slot_states, cache, lengths,
-                          cur_tok, step_no: int):
+    def _admit_free_slots(self, pending, slot_states, cache, cur_tok,
+                          lengths, remaining, done, step_no: int):
         """Admit queued requests into every free slot.  Two phases so the
         B=1 prefills overlap: dispatch ALL prefills + slot writes first
-        (JAX async dispatch), materialize the first tokens after."""
+        (JAX async dispatch), then materialize every admitted slot's first
+        token in ONE batched device fetch (a per-slot ``int(argmax)`` would
+        sync once per admission)."""
         admitted = []
         for slot, s in enumerate(slot_states):
             if not s.busy and pending:
@@ -257,13 +437,25 @@ class ContinuousServingEngine:
                 last_logits, pre_cache = self.prefill(self.params, batch)
                 cache = self._write_slot(cache, pre_cache, slot)
                 admitted.append((slot, req, last_logits))
-        for slot, req, last_logits in admitted:
-            first = int(jnp.argmax(last_logits[0]))
-            lengths[slot] = len(req.prompt) + self._offset
-            cur_tok[slot] = first
-            slot_states[slot] = _Slot(uid=req.uid, remaining=req.max_new - 1,
-                                      tokens=[first], admitted_step=step_no)
-        return cache
+        syncs = 0
+        if admitted:
+            firsts = np.asarray(jnp.argmax(
+                jnp.concatenate([ll for _, _, ll in admitted], axis=0),
+                axis=-1).astype(jnp.int32))
+            syncs = 1
+            for (slot, req, _), first in zip(admitted, firsts):
+                first = int(first)
+                slot_states[slot] = _Slot(
+                    uid=req.uid, remaining=req.max_new - 1,
+                    tokens=[first], admitted_step=step_no)
+                cur_tok = cur_tok.at[slot].set(first)
+                lengths = lengths.at[slot].set(
+                    len(req.prompt) + self._offset)
+                remaining = remaining.at[slot].set(req.max_new - 1)
+                done = done.at[slot].set(
+                    req.max_new <= 1
+                    or (self.eos_id is not None and first == self.eos_id))
+        return cache, cur_tok, lengths, remaining, done, syncs
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[ServeRequest]
@@ -278,16 +470,22 @@ class ContinuousServingEngine:
         assert P + self._offset + max(r.max_new for r in requests) \
             <= self.max_len, "max_len too small for prompt + generation"
 
+        K = self.macro_steps
         pending = deque(requests)
         slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
-        lengths = np.zeros((self.slots,), np.int32)
-        cur_tok = np.zeros((self.slots,), np.int32)
+        # device-resident decode state; done=True marks free/frozen slots
+        lengths = jnp.zeros((self.slots,), jnp.int32)
+        cur_tok = jnp.zeros((self.slots,), jnp.int32)
+        remaining = jnp.zeros((self.slots,), jnp.int32)
+        done = jnp.ones((self.slots,), bool)
         cache = M.init_cache(cfg, self.slots, self.max_len,
                              dtype=cfg.jnp_dtype)
         outputs: List[RequestOutput] = []
         step_no = 0
         busy_acc = 0.0
         t_prefill = t_decode = 0.0
+        host_syncs = 0
+        dispatches = 0
 
         def _finished(s: _Slot) -> bool:
             return s.busy and (s.remaining <= 0
@@ -297,8 +495,10 @@ class ContinuousServingEngine:
         while pending or any(s.busy for s in slot_states):
             # --- admit into every free slot --------------------------
             t0 = time.perf_counter()
-            cache = self._admit_free_slots(pending, slot_states, cache,
-                                           lengths, cur_tok, step_no)
+            cache, cur_tok, lengths, remaining, done, n_sync = \
+                self._admit_free_slots(pending, slot_states, cache, cur_tok,
+                                       lengths, remaining, done, step_no)
+            host_syncs += n_sync
             t_prefill += time.perf_counter() - t0
 
             # --- evict completed slots (at admission or post-decode) --
@@ -307,31 +507,69 @@ class ContinuousServingEngine:
                 if _finished(s):
                     outputs.append(RequestOutput(
                         uid=s.uid, tokens=np.asarray(s.tokens, np.int32),
-                        admitted_step=s.admitted_step, finished_step=step_no))
+                        admitted_step=s.admitted_step,
+                        finished_step=s.finished_at if s.finished_at >= 0
+                        else step_no))
                     slot_states[i] = _Slot()
-                    lengths[i] = 0
+                    done = done.at[i].set(True)   # freeze the freed slot
                     freed = True
             if freed and pending:
                 continue  # refill freed slots before the next decode step
             if not any(s.busy for s in slot_states):
                 break
 
-            # --- one decode step over all slots ----------------------
-            t0 = time.perf_counter()
-            tok = jnp.asarray(cur_tok)[:, None]
-            logits, cache = self.step(self.params, cache, tok,
-                                      jnp.asarray(lengths))
-            new_tok = np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-            t_decode += time.perf_counter() - t0
-            step_no += 1
-            busy_acc += sum(s.busy for s in slot_states) / self.slots
+            if K == 0:
+                # --- pre-fusion loop: one step, one sync per token ----
+                t0 = time.perf_counter()
+                logits, cache = self.step(self.params, cache,
+                                          cur_tok[:, None], lengths)
+                new_tok = np.asarray(
+                    jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                host_syncs += 1
+                t_decode += time.perf_counter() - t0
+                step_no += 1
+                busy = np.array([s.busy for s in slot_states])
+                busy_acc += busy.sum() / self.slots
+                adv = jnp.asarray(busy)
+                cur_tok = jnp.where(adv, jnp.asarray(new_tok), cur_tok)
+                lengths = lengths + adv
+                for i, s in enumerate(slot_states):
+                    if s.busy:
+                        s.tokens.append(int(new_tok[i]))
+                        s.remaining -= 1
+                continue
 
+            # --- one fused macro-step over all slots ------------------
+            t0 = time.perf_counter()
+            toks, cache, cur_tok, lengths, remaining, done = \
+                self._get_loop(K)(self.params, cache, cur_tok, lengths,
+                                  remaining, done)
+            block = np.asarray(toks)      # [K, slots]: the ONE host sync
+            host_syncs += 1
+            dispatches += 1
+            t_decode += time.perf_counter() - t0
+
+            # host bookkeeping mirrors the device's freeze logic exactly:
+            # a slot consumes tokens until remaining runs out or eos lands
+            consumed = np.zeros((self.slots,), np.int64)
             for i, s in enumerate(slot_states):
-                if s.busy:
-                    s.tokens.append(int(new_tok[i]))
-                    s.remaining -= 1
-                    lengths[i] += 1
-                    cur_tok[i] = int(new_tok[i])
+                if not s.busy:
+                    continue
+                col = block[:min(s.remaining, K), i]
+                if self.eos_id is not None:
+                    hits = np.nonzero(col == self.eos_id)[0]
+                    if hits.size:
+                        col = col[:hits[0] + 1]
+                s.tokens.extend(int(x) for x in col)
+                s.remaining -= len(col)
+                consumed[i] = len(col)
+                if s.remaining <= 0 or (self.eos_id is not None
+                                        and s.tokens[-1] == self.eos_id):
+                    s.finished_at = step_no + len(col)
+            steps_used = int(consumed.max())
+            for j in range(steps_used):
+                busy_acc += (consumed > j).sum() / self.slots
+            step_no += steps_used
 
         jax.block_until_ready(cache)
         total_tokens = sum(len(o.tokens) for o in outputs)
@@ -340,6 +578,9 @@ class ContinuousServingEngine:
             requests=len(outputs), total_tokens=total_tokens,
             decode_steps=step_no, prefill_s=t_prefill, decode_s=t_decode,
             tokens_per_s=total_tokens / max(wall, 1e-9),
-            occupancy=busy_acc / max(step_no, 1))
+            occupancy=busy_acc / max(step_no, 1),
+            host_syncs=host_syncs, macro_dispatches=dispatches,
+            t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
+            else 0.0)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats

@@ -1,4 +1,6 @@
 """Continuous-batching runtime + async offload dispatch + controller tests."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -99,6 +101,104 @@ def test_continuous_empty_and_single(small_llama):
     outs, stats = cont.run([ServeRequest(uid=0, prompt=prompt, max_new=1)])
     assert len(outs) == 1 and len(outs[0].tokens) == 1
     assert stats.decode_steps == 0  # first token comes from the prefill
+
+
+# --- fused macro-step decode: bit-identity with the per-step loop ----------
+def _family_fixture(arch: str, kv_int8: bool):
+    cfg = reduced(get_config(arch))
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_quant="int8")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    P, n = 8, 5
+    prompts = rng.integers(0, cfg.vocab_size, (n, P)).astype(np.int32)
+    frontend = None
+    if cfg.frontend:
+        frontend = rng.standard_normal(
+            (n, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model)
+        ).astype(np.float32)
+    # mixed lengths: max_new=1 evicts at admission, 3/4 finish mid-macro
+    # (K=4), 9 spans three macro-steps
+    max_news = [1, 6, 3, 9, 4]
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=m,
+                         frontend=None if frontend is None else frontend[i])
+            for i, m in enumerate(max_news)]
+    return cfg, params, reqs
+
+
+@pytest.mark.parametrize("arch,kv_int8", [
+    ("llama3.2-1b", False),       # transformer KV cache
+    ("falcon-mamba-7b", False),   # SSM conv + state caches
+    ("zamba2-2.7b", False),       # hybrid: mamba backbone + shared attn KV
+    ("internvl2-1b", True),       # vlm frontend offset + int8-quantized KV
+])
+def test_fused_macro_step_bit_identity(arch, kv_int8):
+    """The fused K-token loop must emit exactly the per-step loop's token
+    streams for every cache family: donation, device-side argmax, frozen
+    slots and boundary-lagged eviction may not perturb any live slot."""
+    cfg, params, reqs = _family_fixture(arch, kv_int8)
+    per_step = ContinuousServingEngine(cfg, params, slots=2, max_len=48,
+                                       macro_steps=0)
+    fused = ContinuousServingEngine(cfg, params, slots=2, max_len=48,
+                                    macro_steps=4, share_from=per_step)
+    ref, ref_stats = per_step.run(reqs)
+    outs, stats = fused.run(reqs)
+    assert [o.uid for o in outs] == [o.uid for o in ref]
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert stats.total_tokens == ref_stats.total_tokens
+    assert stats.macro_dispatches > 0
+    # the whole point: strictly fewer device->host round-trips
+    assert stats.host_syncs < ref_stats.host_syncs
+
+
+def test_fused_generate_bit_identity(small_llama):
+    """ServingEngine: macro-stepped generate == per-step generate, with one
+    host sync per macro-step instead of per token."""
+    cfg, params = small_llama
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    per_step = ServingEngine(cfg, params, max_len=48, macro_steps=0)
+    fused = ServingEngine(cfg, params, max_len=48, macro_steps=8)
+    for max_new in (1, 7, 16):    # below / mid / multiple-of-K boundaries
+        ref = per_step.generate(prompts, max_new=max_new)
+        out = fused.generate(prompts, max_new=max_new)
+        np.testing.assert_array_equal(out.tokens, ref.tokens)
+        assert ref.host_syncs == max_new
+        assert out.host_syncs == 1 + -(-max(max_new - 1, 0) // 8)
+
+
+def test_fused_mid_macro_eos_eviction(small_llama):
+    """A request hitting eos mid-macro-step is truncated at the eos token
+    (inclusive) and its slot refilled at the boundary — streams stay
+    bit-identical to the per-step loop with the same eos."""
+    cfg, params = small_llama
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    probe = ContinuousServingEngine(cfg, params, slots=2, max_len=48)
+    full, _ = probe.run([ServeRequest(uid=i, prompt=prompts[i], max_new=10)
+                         for i in range(4)])
+    # pick an eos that FIRST lands at position 1 or 2 of uid 0's stream:
+    # the request then finishes on micro-step 2 or 3 of the first K=4
+    # macro-step — strictly mid-macro
+    t0 = [int(x) for x in full[0].tokens]
+    j = next((k for k in (1, 2) if t0[k] not in t0[:k]), None)
+    assert j is not None, f"no unique mid-macro token in {t0}"
+    eos = t0[j]
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=10)
+            for i in range(4)]
+    per_step = ContinuousServingEngine(cfg, params, slots=2, max_len=48,
+                                       macro_steps=0, eos_id=eos)
+    fused = ContinuousServingEngine(cfg, params, slots=2, max_len=48,
+                                    macro_steps=4, eos_id=eos,
+                                    share_from=per_step)
+    ref, _ = per_step.run(reqs)
+    outs, _ = fused.run(reqs)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert len(outs[0].tokens) == j + 1 and outs[0].tokens[-1] == eos
+    assert any(len(o.tokens) < 10 for o in outs)     # eos actually evicted
+    assert all(o.tokens[-1] == eos or len(o.tokens) == 10 for o in outs)
 
 
 # --- async offload dispatch ------------------------------------------------
