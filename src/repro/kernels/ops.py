@@ -1,10 +1,16 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + fused serving hot-path ops.
 
 ``interpret`` is auto-detected per backend: on a real TPU the kernels
 compile through Mosaic; everywhere else (CPU CI, GPU) they run in
 interpreter mode for correctness.  ``REPRO_PALLAS_INTERPRET=0/1``
 overrides the detection either way (e.g. force-interpret on a TPU while
 debugging a kernel).
+
+``admit_slots`` is not a Pallas kernel — it is the XLA-fused admission
+splice the continuous serving engine dispatches at macro-step boundaries:
+one donated program replacing the 4-scatters-per-slot host loop admission
+used to cost, so splicing shadow-prefilled requests into the live slot
+pool never syncs the host.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 
 def default_interpret() -> bool:
@@ -36,6 +43,29 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
     return decode_attention_pallas(q, k_cache, v_cache, cache_len,
                                    window=window,
                                    interpret=default_interpret())
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("eos_id",))
+def admit_slots(cur_tok, lengths, remaining, done, slot_ids, last_logits,
+                prompt_lens, max_news, *, eos_id: int = -1):
+    """Splice newly admitted requests into the decode-state vectors.
+
+    One fused dispatch per admission phase: takes the [M] slot ids being
+    filled, the concatenated prefill logits [M, V] and per-request prompt
+    lengths / generation budgets, greedy-argmaxes the first tokens ON
+    DEVICE and scatters all four state vectors at once.  The state vectors
+    are donated (updated in place) — callers must rebind from the returns,
+    exactly like the decode loop.  Returns the updated state plus the [M]
+    first tokens, whose host fetch the engine defers until the next
+    macro-step block await (by which point they are long computed).
+    """
+    first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    cur_tok = cur_tok.at[slot_ids].set(first)
+    lengths = lengths.at[slot_ids].set(prompt_lens)
+    remaining = remaining.at[slot_ids].set(max_news - 1)
+    done = done.at[slot_ids].set((max_news <= 1) | (first == eos_id))
+    return cur_tok, lengths, remaining, done, first
 
 
 @jax.jit

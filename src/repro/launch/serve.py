@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto] \
         [--continuous] [--slots 4] [--macro-steps 8] \
+        [--no-overlap-admission] \
         [--topology pair|star] [--nodes N] [--telemetry-json out.json]
 
 Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
@@ -93,6 +94,7 @@ def build_topology(kind: str, nodes: int) -> C.Topology:
 
 def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                      slots: int, split: str, macro_steps: int = 8,
+                     overlap_admission: bool = True,
                      topology: Optional[C.Topology] = None,
                      link=None, telemetry_path: Optional[str] = None
                      ) -> C.ServeResult:
@@ -112,7 +114,8 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
     offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
     max_len = prompt_len + offset + max_new + 8
     runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len,
-                              macro_steps=macro_steps)
+                              macro_steps=macro_steps,
+                              overlap_admission=overlap_admission)
     runtime.add_task(cfg.name, cfg, params,
                      max_new=max_new,
                      payload_bytes_per_item=prompt_len * cfg.d_model * 2)
@@ -135,7 +138,9 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
           f"({tot['tok_per_s']:.1f} tok/s), "
           f"final split={tot['final_split']}, "
           f"{tot['host_syncs']} host syncs "
-          f"({tot['host_syncs_per_token']:.3f}/token, K={macro_steps})")
+          f"({tot['host_syncs_per_token']:.3f}/token, K={macro_steps}), "
+          f"{tot['admission_stalls']} admission stalls"
+          f"{' (overlapped)' if overlap_admission else ''}")
     if telemetry_path:
         with open(telemetry_path, "w") as fh:
             fh.write(result.to_json(indent=2))
@@ -160,6 +165,12 @@ def main():
     ap.add_argument("--macro-steps", type=int, default=8,
                     help="fused decode tokens per dispatch (0 = pre-fusion "
                          "per-token loop)")
+    ap.add_argument("--overlap-admission", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="prefill newly admitted requests into shadow slots "
+                         "behind the in-flight decode macro-step "
+                         "(--no-overlap-admission = boundary-blocking "
+                         "admission for A/B)")
     ap.add_argument("--topology", choices=("pair", "star"), default="pair",
                     help="2-node pair (paper) or §VIII star")
     ap.add_argument("--nodes", type=int, default=None,
@@ -189,6 +200,7 @@ def main():
         serve_continuous(cfg, params, reqs, prompt_len=P,
                          max_new=args.max_new, slots=args.slots,
                          split=args.split, macro_steps=args.macro_steps,
+                         overlap_admission=args.overlap_admission,
                          topology=topology,
                          telemetry_path=args.telemetry_json)
         return

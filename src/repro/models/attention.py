@@ -179,6 +179,11 @@ def quantize_kv(t):
     return q.astype(jnp.int8), scale
 
 
+def _row_update(c, n, i):
+    """Single-row cache write: c [S,Hkv,dh], n [1,Hkv,dh] at seq index i."""
+    return jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), i, axis=0)
+
+
 def cache_update(cache, new, index):
     """Write one token's K or V into the cache at `index` (seq axis=1).
 
@@ -189,66 +194,63 @@ def cache_update(cache, new, index):
     (~0.5 GB/chip/layer on llama decode_32k — §Perf iteration C2); instead
     a shard_map makes the owning sequence-shard apply the update locally,
     with zero collective traffic.
+
+    ``index`` may be a scalar (static batching: all rows at one position)
+    or a per-slot [B] vector (continuous batching: each slot writes its own
+    position).  Both ride the same shard_map on a sharded cache — the
+    per-slot form vmaps the row update inside each sequence shard and masks
+    out the rows whose position lands on another shard, so the continuous
+    engine runs unmodified on a model-sharded mesh.
     """
-    from repro.models.sharding import active_mesh
+    from repro.models.sharding import active_mesh, seq_shard_layout
     from jax.sharding import PartitionSpec as P
-    import numpy as _np
 
     mesh = active_mesh()
-    if jnp.ndim(index):
-        # per-slot write positions [B] (continuous batching): each batch row
-        # lands at its own sequence index — vmap the single-row update.
-        # Only valid off-mesh: under a sequence-sharded cache this vmap
-        # would re-trigger the whole-cache replication the shard_map path
-        # below exists to avoid, so fail loudly instead of silently.
-        if mesh is not None and "model" in mesh.shape:
-            raise NotImplementedError(
-                "per-slot cache indices are not supported with a sharded "
-                "KV cache yet — run continuous batching off-mesh")
-        return jax.vmap(
-            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
-                c, n.astype(c.dtype), i, axis=0))(cache, new, index)
-
+    vector = bool(jnp.ndim(index))
     B, S, Hkv, dh = cache.shape
-    if mesh is None or "model" not in mesh.shape:
-        return jax.lax.dynamic_update_slice_in_dim(cache, new, index, axis=1)
-    msize = mesh.shape["model"]
-    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
-    bdiv = int(_np.prod([mesh.shape[a] for a in baxes]))
-    b_sharded = B % bdiv == 0 and B >= bdiv
-    s_axes = ([] if b_sharded else list(baxes))
-    if Hkv % msize != 0 or Hkv < msize:
-        s_axes.append("model")
-    sdiv = int(_np.prod([mesh.shape[a] for a in s_axes])) if s_axes else 1
-    if not s_axes or S % sdiv != 0 or S < sdiv:
+    lay = None
+    if mesh is not None and "model" in mesh.shape:
+        lay = seq_shard_layout(mesh, B, S, Hkv)
+    if lay is None:
         # sequence dim not sharded — the plain update is already local
-        return jax.lax.dynamic_update_slice_in_dim(cache, new, index, axis=1)
+        if vector:
+            return jax.vmap(_row_update)(cache, new, index)
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), index, axis=1)
 
-    bspec = (baxes if len(baxes) > 1 else baxes[0]) if b_sharded else None
-    sspec = tuple(s_axes) if len(s_axes) > 1 else s_axes[0]
-    hspec = "model" if (Hkv % msize == 0 and Hkv >= msize) else None
-    S_loc = S // sdiv
-
-    def body(c, n, idx):
+    def _shard_start():
         # linear index of this device's sequence shard
         lin = jnp.zeros((), jnp.int32)
         stride = 1
-        for ax in reversed(s_axes):
+        for ax in reversed(lay.s_axes):
             lin = lin + jax.lax.axis_index(ax) * stride
             stride = stride * mesh.shape[ax]
-        start = lin * S_loc
-        local = jnp.clip(idx - start, 0, S_loc - 1)
-        mine = (idx >= start) & (idx < start + S_loc)
-        upd = jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype),
-                                                  local, axis=1)
-        return jnp.where(mine, upd, c)
+        return lin * lay.s_local
+
+    if vector:
+        def body(c, n, idx):
+            start = _shard_start()
+            local = jnp.clip(idx - start, 0, lay.s_local - 1)
+            mine = (idx >= start) & (idx < start + lay.s_local)   # [B_loc]
+            upd = jax.vmap(_row_update)(c, n, local)
+            return jnp.where(mine[:, None, None, None], upd, c)
+        idx_spec = P(lay.bspec)   # per-row indices shard with the batch dim
+    else:
+        def body(c, n, idx):
+            start = _shard_start()
+            local = jnp.clip(idx - start, 0, lay.s_local - 1)
+            mine = (idx >= start) & (idx < start + lay.s_local)
+            upd = jax.lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype),
+                                                      local, axis=1)
+            return jnp.where(mine, upd, c)
+        idx_spec = P()
 
     from repro.models.sharding import shard_map_compat
     return shard_map_compat(
         body, mesh=mesh,
-        in_specs=(P(bspec, sspec, hspec, None),
-                  P(bspec, None, hspec, None), P()),
-        out_specs=P(bspec, sspec, hspec, None),
+        in_specs=(P(lay.bspec, lay.sspec, lay.hspec, None),
+                  P(lay.bspec, None, lay.hspec, None), idx_spec),
+        out_specs=P(lay.bspec, lay.sspec, lay.hspec, None),
         check_vma=False,
     )(cache, new, index)
 

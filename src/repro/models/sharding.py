@@ -14,7 +14,7 @@ Logical names:
 from __future__ import annotations
 
 from contextlib import contextmanager
-from typing import Optional
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import numpy as np
@@ -48,6 +48,45 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_vma)
+
+
+class SeqShardLayout(NamedTuple):
+    """How a [B, S, Hkv, dh] KV-cache leaf lays out on a model-sharded mesh.
+
+    ``bspec``/``sspec``/``hspec`` are the PartitionSpec entries for the
+    batch, sequence and kv-head dims; ``s_axes`` are the mesh axes the
+    sequence dim shards over and ``s_local`` is the per-shard sequence
+    length.  Shared by the scalar and per-slot ``cache_update`` shard_map
+    paths so both agree byte-for-byte on the cache layout."""
+    bspec: object
+    sspec: object
+    hspec: Optional[str]
+    s_axes: Tuple[str, ...]
+    s_local: int
+
+
+def seq_shard_layout(mesh, B: int, S: int, Hkv: int) -> Optional[SeqShardLayout]:
+    """Resolve the KV-cache layout for ``mesh``, or None when the sequence
+    dim ends up unsharded (a dynamic-index update is already shard-local).
+
+    Batch axes ("pod"/"data") shard the batch dim when it divides; otherwise
+    they spill onto the sequence dim.  The kv-head dim takes "model" when it
+    divides, else "model" also shards the sequence — the case the shard_map
+    update path exists for."""
+    msize = mesh.shape["model"]
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bdiv = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    b_sharded = bool(baxes) and B % bdiv == 0 and B >= bdiv
+    s_axes = [] if b_sharded else list(baxes)
+    if Hkv % msize != 0 or Hkv < msize:
+        s_axes.append("model")
+    sdiv = int(np.prod([mesh.shape[a] for a in s_axes])) if s_axes else 1
+    if not s_axes or S % sdiv != 0 or S < sdiv:
+        return None
+    bspec = (baxes if len(baxes) > 1 else baxes[0]) if b_sharded else None
+    sspec = tuple(s_axes) if len(s_axes) > 1 else s_axes[0]
+    hspec = "model" if (Hkv % msize == 0 and Hkv >= msize) else None
+    return SeqShardLayout(bspec, sspec, hspec, tuple(s_axes), S // sdiv)
 
 
 def constrain(x, *logical):

@@ -23,6 +23,18 @@ boundaries.  Token streams are bit-identical to the per-step loop
 (``macro_steps=0`` keeps the pre-fusion host loop for A/B benchmarking):
 slots only attend to their own positions, so a finished slot decoding junk
 until the next boundary cannot perturb any live slot.
+
+With ``overlap_admission`` (the default on the fused path) prefill rides
+the spare dispatch instead of stalling the boundary: queued requests are
+speculatively prefilled into *shadow slots* — B=1 prefill programs
+dispatched right behind the in-flight decode macro-step, never awaited —
+and at the next boundary the ready shadows are spliced into freed slots
+with the donated slot-write + ``admit_slots`` programs before the next
+macro-step launches.  Decode never waits on prefill: the only host sync
+per iteration is the macro-step's token-block fetch (the spliced first
+tokens piggyback on it), and ``admission_stalls`` counts the boundaries
+where a shadow miss forced prefill onto the critical path (zero at steady
+state — shadows are kept topped up to the slot count).
 """
 from __future__ import annotations
 
@@ -346,6 +358,13 @@ class ContinuousStats:
                                        # phase; per-token when macro_steps=0)
     macro_dispatches: int = 0          # fused decode-loop invocations
     t_per_macro_step_s: float = 0.0    # decode wall per fused dispatch
+    t_prefill_overlap_s: float = 0.0   # host wall spent dispatching shadow
+                                       # prefills behind the in-flight decode
+                                       # macro-step (off the critical path)
+    admission_stalls: int = 0          # boundaries where live slots waited
+                                       # on a prefill (shadow miss, or every
+                                       # admission phase when not overlapped)
+    shadow_prefills: int = 0           # speculative prefills dispatched
 
 
 @dataclass
@@ -383,20 +402,29 @@ class ContinuousServingEngine:
     (and state) arguments, so the KV buffers are updated in place.
     ``macro_steps=0`` preserves the pre-fusion per-token host loop for A/B
     benchmarking.
+
+    ``overlap_admission=True`` (the default) runs the fused path with
+    speculative shadow-slot prefill: see the module docstring.  Per-request
+    token streams are bit-identical across all three schedules (overlapped,
+    boundary-blocking, per-step) — admission timing moves, tokens do not.
     """
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
                  use_pallas: Union[bool, str] = "auto",
                  eos_id: Optional[int] = None,
                  macro_steps: int = 8,
+                 overlap_admission: bool = True,
                  share_from: Optional["ContinuousServingEngine"] = None):
         """`share_from`: another engine over the SAME cfg whose jitted
         prefill/step/slot-write/decode-loop programs this one reuses —
         jax.jit caches per function object, so sibling node-group engines
-        would otherwise recompile byte-identical programs."""
+        would otherwise recompile byte-identical programs.  (Programs are
+        traced with the mesh active at first call — don't share across
+        different mesh contexts.)"""
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.macro_steps = int(macro_steps)
+        self.overlap_admission = bool(overlap_admission)
         self._use_pallas = resolve_use_pallas(use_pallas)
         if share_from is not None and share_from.cfg is cfg:
             self.prefill = share_from.prefill
@@ -418,6 +446,37 @@ class ContinuousServingEngine:
     def _get_loop(self, K: int):
         return _loop_program(self.cfg, self._loops, K, self.eos_id,
                              self._use_pallas)
+
+    # ------------------------------------------------------------------
+    def _consume_block(self, block, slot_states, K: int,
+                       step_no: int) -> Tuple[int, float]:
+        """Host bookkeeping for one fetched ``[K, slots]`` token block,
+        mirroring the device's freeze logic exactly: each live slot
+        consumes tokens until its budget runs out or eos lands.  Shared
+        by the boundary and overlapped schedules — one source of truth
+        for eos trimming, ``finished_at`` stamping and occupancy.
+        Returns (steps_used, busy-occupancy increment)."""
+        eos = self.eos_id
+        consumed = np.zeros((self.slots,), np.int64)
+        for i, s in enumerate(slot_states):
+            if not s.busy or s.remaining <= 0 or (
+                    eos is not None and s.tokens and s.tokens[-1] == eos):
+                continue
+            col = block[:min(s.remaining, K), i]
+            if eos is not None:
+                hits = np.nonzero(col == eos)[0]
+                if hits.size:
+                    col = col[:hits[0] + 1]
+            s.tokens.extend(int(x) for x in col)
+            s.remaining -= len(col)
+            consumed[i] = len(col)
+            if s.remaining <= 0 or (eos is not None
+                                    and s.tokens[-1] == eos):
+                s.finished_at = step_no + len(col)
+        steps_used = int(consumed.max())
+        busy_inc = sum(float((consumed > j).sum()) / self.slots
+                       for j in range(steps_used))
+        return steps_used, busy_inc
 
     # ------------------------------------------------------------------
     def _admit_free_slots(self, pending, slot_states, cache, cur_tok,
@@ -469,7 +528,18 @@ class ContinuousServingEngine:
         assert all(r.max_new >= 1 for r in requests)
         assert P + self._offset + max(r.max_new for r in requests) \
             <= self.max_len, "max_len too small for prompt + generation"
+        if self.macro_steps > 0 and self.overlap_admission:
+            return self._run_overlapped(requests)
+        return self._run_boundary(requests)
 
+    # ------------------------------------------------------------------
+    def _run_boundary(self, requests: Sequence[ServeRequest]
+                      ) -> Tuple[List[RequestOutput], ContinuousStats]:
+        """Boundary-blocking admission (pre-overlap schedule): every macro
+        boundary with free slots runs prefill while all live slots wait.
+        Kept as the A/B baseline — token streams are identical to the
+        overlapped schedule."""
+        cfg = self.cfg
         K = self.macro_steps
         pending = deque(requests)
         slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
@@ -486,6 +556,7 @@ class ContinuousServingEngine:
         t_prefill = t_decode = 0.0
         host_syncs = 0
         dispatches = 0
+        stalls = 0
 
         def _finished(s: _Slot) -> bool:
             return s.busy and (s.remaining <= 0
@@ -495,10 +566,13 @@ class ContinuousServingEngine:
         while pending or any(s.busy for s in slot_states):
             # --- admit into every free slot --------------------------
             t0 = time.perf_counter()
+            live_before = any(s.busy for s in slot_states)
             cache, cur_tok, lengths, remaining, done, n_sync = \
                 self._admit_free_slots(pending, slot_states, cache, cur_tok,
                                        lengths, remaining, done, step_no)
             host_syncs += n_sync
+            if n_sync and live_before:
+                stalls += 1     # live slots sat idle through this prefill
             t_prefill += time.perf_counter() - t0
 
             # --- evict completed slots (at admission or post-decode) --
@@ -549,26 +623,9 @@ class ContinuousServingEngine:
             dispatches += 1
             t_decode += time.perf_counter() - t0
 
-            # host bookkeeping mirrors the device's freeze logic exactly:
-            # a slot consumes tokens until remaining runs out or eos lands
-            consumed = np.zeros((self.slots,), np.int64)
-            for i, s in enumerate(slot_states):
-                if not s.busy:
-                    continue
-                col = block[:min(s.remaining, K), i]
-                if self.eos_id is not None:
-                    hits = np.nonzero(col == self.eos_id)[0]
-                    if hits.size:
-                        col = col[:hits[0] + 1]
-                s.tokens.extend(int(x) for x in col)
-                s.remaining -= len(col)
-                consumed[i] = len(col)
-                if s.remaining <= 0 or (self.eos_id is not None
-                                        and s.tokens[-1] == self.eos_id):
-                    s.finished_at = step_no + len(col)
-            steps_used = int(consumed.max())
-            for j in range(steps_used):
-                busy_acc += (consumed > j).sum() / self.slots
+            steps_used, busy_inc = self._consume_block(
+                block, slot_states, K, step_no)
+            busy_acc += busy_inc
             step_no += steps_used
 
         jax.block_until_ready(cache)
@@ -581,6 +638,207 @@ class ContinuousServingEngine:
             occupancy=busy_acc / max(step_no, 1),
             host_syncs=host_syncs, macro_dispatches=dispatches,
             t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
-            else 0.0)
+            else 0.0,
+            admission_stalls=stalls)
+        outputs.sort(key=lambda o: o.uid)
+        return outputs, stats
+
+    # ------------------------------------------------------------------
+    def _run_overlapped(self, requests: Sequence[ServeRequest]
+                        ) -> Tuple[List[RequestOutput], ContinuousStats]:
+        """Speculative overlapped admission (the fused-path default).
+
+        Per iteration, in dispatch order (all async — OffloadEngine's
+        dispatch-all-then-await pattern):
+
+          1. splice ready shadow prefills into free slots: donated
+             slot-cache writes + one fused ``admit_slots`` state scatter
+             (the only prefill work on the critical path; a shadow miss
+             here with live slots waiting counts as an admission stall),
+          2. launch the decode macro-step for the live slots,
+          3. top the shadow queue back up to ``slots`` speculative B=1
+             prefills from the pending queue — these execute behind the
+             in-flight macro-step, off the critical path,
+          4. await the macro-step's ``[K, slots]`` token block (the ONE
+             host sync), piggybacking the spliced slots' first tokens on
+             it (they were enqueued before the decode loop, so the fetch
+             returns immediately), then evict finished slots.
+
+        Shadows are request-keyed, not slot-keyed, so a speculative
+        prefill is never wasted — at worst it waits another boundary for a
+        slot to free.  Token streams are bit-identical to the boundary and
+        per-step schedules: each slot attends only to its own positions,
+        and admission still lands at macro-step boundaries.
+        """
+        from repro.kernels.ops import admit_slots
+
+        cfg = self.cfg
+        K = self.macro_steps
+        eos = self.eos_id
+        pending = deque(requests)
+        # in-flight speculative prefills: (request, last_logits, cache)
+        shadows: deque = deque()
+        slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
+        lengths = jnp.zeros((self.slots,), jnp.int32)
+        cur_tok = jnp.zeros((self.slots,), jnp.int32)
+        remaining = jnp.zeros((self.slots,), jnp.int32)
+        done = jnp.ones((self.slots,), bool)
+        cache = M.init_cache(cfg, self.slots, self.max_len,
+                             dtype=cfg.jnp_dtype)
+        outputs: List[RequestOutput] = []
+        step_no = 0
+        busy_acc = 0.0
+        t_prefill = t_decode = t_overlap = 0.0
+        host_syncs = dispatches = stalls = n_shadow = 0
+
+        def _dispatch_shadow():
+            req = pending.popleft()
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            if req.frontend is not None:
+                batch["frontend"] = jnp.asarray(req.frontend[None])
+            last_logits, pre_cache = self.prefill(self.params, batch)
+            # a single-token request never touches a slot: park only its
+            # logits, so speculative singles cost no cache memory
+            shadows.append((req, last_logits,
+                            None if req.max_new <= 1 else pre_cache))
+
+        def _eos_done(s: _Slot) -> bool:
+            return bool(s.tokens) and eos is not None and s.tokens[-1] == eos
+
+        while pending or shadows or any(s.busy for s in slot_states):
+            # --- 1. splice shadows into free slots (macro boundary) ----
+            t0 = time.perf_counter()
+            boundary_step = step_no
+            live_before = any(s.busy for s in slot_states)
+            inline = 0
+            newly: List[Tuple[int, ServeRequest, Any]] = []
+            # singles need no slot: flush every parked one at each
+            # boundary so they can never pile up in (or starve) the
+            # shadow queue — they complete from their prefill logits at
+            # the await below
+            singles: List[Tuple[ServeRequest, Any]] = [
+                (r, ll) for r, ll, _pc in shadows if r.max_new <= 1]
+            if singles:
+                fillers = [e for e in shadows if e[0].max_new > 1]
+                shadows.clear()
+                shadows.extend(fillers)
+            free = (i for i, s in enumerate(slot_states) if not s.busy)
+            slot = next(free, None)
+            while slot is not None:
+                if not shadows:
+                    if not pending:
+                        break
+                    _dispatch_shadow()   # shadow miss: prefill exposed
+                    inline += 1
+                req, last_logits, pre_cache = shadows.popleft()
+                if req.max_new <= 1:
+                    # single-token request: its one token is the prefill
+                    # argmax — complete it without consuming the slot or
+                    # riding a (frozen) macro-step
+                    singles.append((req, last_logits))
+                    continue
+                cache = self._write_slot(cache, pre_cache, slot)
+                newly.append((slot, req, last_logits))
+                slot = next(free, None)
+            if inline and live_before:
+                stalls += 1     # decode waited on an un-overlapped prefill
+            single_dev = None
+            if singles:
+                single_dev = jnp.argmax(jnp.concatenate(
+                    [ll for _, ll in singles], axis=0),
+                    axis=-1).astype(jnp.int32)
+            first_dev = None
+            if newly:
+                cur_tok, lengths, remaining, done, first_dev = admit_slots(
+                    cur_tok, lengths, remaining, done,
+                    jnp.asarray([n[0] for n in newly], jnp.int32),
+                    jnp.concatenate([n[2] for n in newly], axis=0),
+                    jnp.asarray([len(n[1].prompt) + self._offset
+                                 for n in newly], jnp.int32),
+                    jnp.asarray([n[1].max_new for n in newly], jnp.int32),
+                    eos_id=-1 if eos is None else int(eos))
+                for slot, req, _ in newly:
+                    slot_states[slot] = _Slot(
+                        uid=req.uid, remaining=req.max_new - 1,
+                        tokens=[], admitted_step=step_no)
+            t_prefill += time.perf_counter() - t0
+
+            # --- 2. launch the macro-step (never waits on prefill) -----
+            # skip slots the host already knows are spent (budget == 0);
+            # an eos-on-first-token slot is frozen device-side instead
+            t0 = time.perf_counter()
+            toks = None
+            if any(s.busy and s.remaining > 0 and not _eos_done(s)
+                   for s in slot_states):
+                toks, cache, cur_tok, lengths, remaining, done = \
+                    self._get_loop(K)(self.params, cache, cur_tok, lengths,
+                                      remaining, done)
+
+            # --- 3. top up speculative shadow prefills -----------------
+            # depth counts only slot-FILLING shadows: singles never
+            # consume a slot (and are flushed every boundary), so a run
+            # of them must not stop the top-up short of the next
+            # boundary's worth of fillers — that would put their prefill
+            # back on the critical path.  At most `slots` B=1 prefill
+            # caches are parked; parked singles hold logits only.
+            t0o = time.perf_counter()
+            while pending and sum(1 for r, _l, _c in shadows
+                                  if r.max_new > 1) < self.slots:
+                _dispatch_shadow()
+                n_shadow += 1
+            dt_overlap = time.perf_counter() - t0o
+            t_overlap += dt_overlap
+
+            # --- 4. the ONE await: token block + piggybacked firsts ----
+            block = None
+            if toks is not None:
+                block = np.asarray(toks)
+                host_syncs += 1
+                dispatches += 1
+            if first_dev is not None:
+                firsts = np.asarray(first_dev)   # enqueued before the
+                host_syncs += 1                  # loop: instant by now
+                for (slot, req, _), first in zip(newly, firsts):
+                    slot_states[slot].tokens.append(int(first))
+            if single_dev is not None:
+                host_syncs += 1
+                for (req, _), first in zip(singles, np.asarray(single_dev)):
+                    outputs.append(RequestOutput(
+                        uid=req.uid,
+                        tokens=np.asarray([int(first)], np.int32),
+                        admitted_step=boundary_step,
+                        finished_step=boundary_step))
+            t_decode += time.perf_counter() - t0 - dt_overlap
+
+            if block is not None:
+                steps_used, busy_inc = self._consume_block(
+                    block, slot_states, K, step_no)
+                busy_acc += busy_inc
+                step_no += steps_used
+
+            # --- evict finished slots (freed slots resplice at step 1;
+            #     the device froze them the micro-step they finished) ----
+            for i, s in enumerate(slot_states):
+                if s.busy and (s.remaining <= 0 or _eos_done(s)):
+                    outputs.append(RequestOutput(
+                        uid=s.uid, tokens=np.asarray(s.tokens, np.int32),
+                        admitted_step=s.admitted_step,
+                        finished_step=s.finished_at if s.finished_at >= 0
+                        else step_no))
+                    slot_states[i] = _Slot()
+
+        jax.block_until_ready(cache)
+        total_tokens = sum(len(o.tokens) for o in outputs)
+        wall = t_prefill + t_decode + t_overlap
+        stats = ContinuousStats(
+            requests=len(outputs), total_tokens=total_tokens,
+            decode_steps=step_no, prefill_s=t_prefill, decode_s=t_decode,
+            tokens_per_s=total_tokens / max(wall, 1e-9),
+            occupancy=busy_acc / max(step_no, 1),
+            host_syncs=host_syncs, macro_dispatches=dispatches,
+            t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
+            else 0.0,
+            t_prefill_overlap_s=t_overlap, admission_stalls=stalls,
+            shadow_prefills=n_shadow)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats

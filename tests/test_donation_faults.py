@@ -1,0 +1,133 @@
+"""Donation fault injection for the serving hot path.
+
+Every decode-path program donates its cache (and state-vector) arguments:
+``make_decode_loop`` consumes the cache + cur_tok/lengths/remaining/done,
+``serve_step`` / the slot-write program / ``admit_slots`` consume their
+big-cache or state arguments.  The PR-3 invariant is "always rebind from
+the return value, never reuse a donated buffer" — but on backends where
+XLA does not implement aliasing (CPU CI) a violation is silent: the stale
+buffer still holds valid bytes, so a reuse bug only explodes in
+production on TPU.
+
+These tests make the invariant enforceable everywhere: each jitted
+program is wrapped so that, after the call, every leaf of its donated
+arguments is explicitly ``delete()``d (exactly what real donation does).
+Any code path that then touches a consumed buffer raises
+``Array has been deleted`` instead of silently reading stale memory.
+The engines must run every schedule end-to-end under this poisoning and
+still produce the reference token streams.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.kernels import ops as ops_mod
+from repro.models import model as M
+from repro.serving.engine import (ContinuousServingEngine, ServeRequest,
+                                  ServingEngine)
+
+
+def _poison(fn, argnums):
+    """Wrap a jitted callable: after the call, hard-delete the buffers of
+    every donated argument, simulating consumed-on-donation semantics on
+    backends that skip aliasing.  In-flight computations hold their own
+    buffer references, so deletion only invalidates the caller's handle."""
+    def wrapped(*args, **kwargs):
+        out = fn(*args, **kwargs)
+        for i in argnums:
+            for leaf in jax.tree.leaves(args[i]):
+                if isinstance(leaf, jax.Array):
+                    leaf.delete()
+        return out
+    return wrapped
+
+
+def _poison_engine(eng):
+    """Poison every donating program of a serving engine in place."""
+    eng.step = _poison(eng.step, (1,))             # per-step: cache
+    if hasattr(eng, "_write_slot"):                # continuous: big cache
+        eng._write_slot = _poison(eng._write_slot, (0,))
+    orig_get = eng._get_loop
+
+    def get_loop(K, *a):
+        return _poison(orig_get(K, *a), (1, 2, 3, 4, 5))
+    eng._get_loop = get_loop
+    return eng
+
+
+@pytest.fixture()
+def poisoned_admit(monkeypatch):
+    """Poison the fused admission splice (donates all four state vectors).
+    The engine imports it at call time, so patching the module attribute
+    covers every engine instance."""
+    monkeypatch.setattr(ops_mod, "admit_slots",
+                        _poison(ops_mod.admit_slots, (0, 1, 2, 3)))
+
+
+def test_poison_wrapper_detects_reuse():
+    """Meta-test: the fixture actually bites — reusing a poisoned donated
+    argument raises instead of silently reading stale bytes."""
+    f = _poison(jax.jit(lambda x: x + 1, donate_argnums=(0,)), (0,))
+    x = jax.numpy.arange(4.0)
+    y = f(x)
+    np.testing.assert_array_equal(np.asarray(y), np.arange(4.0) + 1)
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(x)                # the donated input is consumed
+
+
+@pytest.mark.parametrize("arch,kv_int8", [
+    ("llama3.2-1b", False),       # transformer KV cache
+    ("internvl2-1b", True),       # vlm frontend + int8 K/V + scale leaves
+])
+def test_continuous_schedules_never_reuse_donated(arch, kv_int8,
+                                                  poisoned_admit):
+    """All three continuous schedules (overlapped, boundary-blocking,
+    per-step) drain a churny mixed stream with every donated buffer
+    poisoned after each dispatch, and still emit identical streams."""
+    cfg = reduced(get_config(arch))
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_quant="int8")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(13)
+    prompts = rng.integers(0, cfg.vocab_size, (6, 8)).astype(np.int32)
+    frontend = None
+    if cfg.frontend:
+        frontend = rng.standard_normal(
+            (6, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model)
+        ).astype(np.float32)
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=m,
+                         frontend=None if frontend is None else frontend[i])
+            for i, m in enumerate([1, 6, 3, 1, 7, 4])]
+
+    clean = ContinuousServingEngine(cfg, params, slots=2, max_len=48,
+                                    macro_steps=0)
+    ref, _ = clean.run(reqs)
+
+    for kwargs in ({"macro_steps": 0},
+                   {"macro_steps": 4, "overlap_admission": False},
+                   {"macro_steps": 4, "overlap_admission": True}):
+        eng = _poison_engine(ContinuousServingEngine(
+            cfg, params, slots=2, max_len=48, share_from=clean, **kwargs))
+        outs, stats = eng.run(reqs)
+        assert stats.total_tokens == sum(r.max_new for r in reqs), kwargs
+        for a, b in zip(ref, outs):
+            np.testing.assert_array_equal(a.tokens, b.tokens,
+                                          err_msg=str(kwargs))
+
+
+def test_generate_never_reuses_donated():
+    """ServingEngine.generate: fused and per-step loops under poisoning."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    clean = ServingEngine(cfg, params, max_len=48, macro_steps=0)
+    ref = clean.generate(prompts, max_new=11)
+    for macro in (0, 4):
+        eng = _poison_engine(ServingEngine(cfg, params, max_len=48,
+                                           macro_steps=macro))
+        out = eng.generate(prompts, max_new=11)
+        np.testing.assert_array_equal(out.tokens, ref.tokens)

@@ -1,0 +1,104 @@
+"""Golden telemetry-schema test.
+
+``ServeResult.telemetry`` (and the ``OffloadReport`` / ``ContinuousStats``
+records that feed it) is the stable schema the benchmarks and any external
+dashboard consume — CI gates parse it by field name.  A silent rename or
+type change would not fail any functional test; it would just break every
+consumer downstream.  This test serializes the telemetry of a fixed pair
+session and compares its *schema* (field names + scalar types, values
+erased) against the checked-in golden at
+``tests/golden/telemetry_schema.json``.
+
+If you add or rename a field DELIBERATELY, regenerate the golden with
+
+    PYTHONPATH=src python tests/test_telemetry_schema.py
+
+and commit the diff — that is the explicit, reviewable act this test
+exists to force.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+import repro.core as C
+from repro.configs.base import get_config, reduced
+from repro.models import model as M
+from repro.serving.engine import ContinuousStats, ServeRequest
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "telemetry_schema.json")
+
+
+def _schema(obj):
+    """Recursive shape-of: dict -> per-key schemas, list -> schema of the
+    first element (telemetry lists are homogeneous), scalars -> type name."""
+    if isinstance(obj, dict):
+        return {k: _schema(obj[k]) for k in sorted(obj)}
+    if isinstance(obj, (list, tuple)):
+        return [_schema(obj[0])] if len(obj) else []
+    if isinstance(obj, bool):
+        return "bool"
+    if isinstance(obj, (int, np.integer)):
+        return "int"
+    if isinstance(obj, (float, np.floating)):
+        return "float"
+    if isinstance(obj, str):
+        return "str"
+    if obj is None:
+        return "none"
+    return type(obj).__name__
+
+
+def _dataclass_schema(cls) -> dict:
+    """Field name -> annotation string; a rename or retype shows up as a
+    golden diff even for fields the session below never populates."""
+    return {f.name: str(f.type) for f in dataclasses.fields(cls)}
+
+
+def _session_telemetry() -> dict:
+    """One fixed, deterministic pair session covering both groups, the
+    fused overlapped-admission path and the wave loop."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    dev = jax.devices()[0]
+    topo = C.Topology.pair(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                           C.WIFI_5GHZ)
+    rt = C.HeteroRuntime(topo, slots=2, max_len=32, macro_steps=4)
+    rt.add_task(cfg.name, cfg, params)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, (6, 8)).astype(np.int32)
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=1 + i % 4,
+                         task=cfg.name) for i in range(6)]
+    result = rt.serve(reqs, split=0.5)   # fixed split: both groups serve
+    return json.loads(result.to_json())  # normalize through the JSON layer
+
+
+def current_schema() -> dict:
+    return {
+        "serve_result_telemetry": _schema(_session_telemetry()),
+        "offload_report": _dataclass_schema(C.OffloadReport),
+        "continuous_stats": _dataclass_schema(ContinuousStats),
+    }
+
+
+def test_telemetry_schema_matches_golden():
+    with open(GOLDEN) as fh:
+        golden = json.load(fh)
+    got = current_schema()
+    assert got == golden, (
+        "telemetry schema drifted from tests/golden/telemetry_schema.json — "
+        "benchmark/dashboard consumers parse these fields by name.  If the "
+        "change is deliberate, regenerate the golden (see module docstring) "
+        "and commit it.\n\ngot:\n" + json.dumps(got, indent=2))
+
+
+if __name__ == "__main__":
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    with open(GOLDEN, "w") as fh:
+        json.dump(current_schema(), fh, indent=2)
+        fh.write("\n")
+    print(f"golden schema -> {GOLDEN}")
