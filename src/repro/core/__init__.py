@@ -26,9 +26,12 @@ from repro.core.profiler import (DeviceProfile, JETSON_NANO, JETSON_XAVIER,
                                  MeasuredProfile, WorkloadCost,
                                  analytic_profile, paper_profiles)
 from repro.core.scheduler import (ControllerConfig, OffloadDecision,
+                                  PrefillRoute, PrefillRouter,
                                   SchedulerConfig, SplitRatioController,
                                   TaskScheduler)
 from repro.core.solver import (SolverConstraints, SolverResult, objective,
                                solve_split_ratio, solve_star)
 from repro.core.topology import (HeteroRuntime, ServeResult, SplitVector,
                                  TaskSpec, Topology, group_times_from_fits)
+from repro.serving.prefill import (PrefillWorker, PrefillWorkerError,
+                                   PrefillWorkerTimeout)

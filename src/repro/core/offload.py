@@ -117,6 +117,13 @@ class OffloadReport:
                                 # with overlapped admission)
     t_prefill_overlap_s: float = 0.0  # shadow-prefill dispatch wall hidden
                                       # behind in-flight decode macro-steps
+    # --- disaggregated-prefill accounting (PR 5) --------------------------
+    prefill_offloaded: int = 0  # shadow prefills dispatched to the
+                                # dedicated prefill group
+    t_kv_transfer_s: float = 0.0  # priced KV-transfer hop total for blocks
+                                  # spliced back from the prefill group
+    prefill_fallbacks: int = 0  # prefill-group failures recovered by local
+                                # shadow prefill (streams unchanged)
 
     @property
     def t_parallel(self) -> float:

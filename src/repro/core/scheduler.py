@@ -19,6 +19,13 @@ serving runtime: it consumes measured ``OffloadReport`` timings (true
 overlapped makespans from the async OffloadEngine), EWMA-smooths per-item
 execution rates, and re-solves Eq. 4 every N steps so the split ratio
 tracks load shifts on either node group.
+
+``PrefillRouter`` (PR 5) applies the same price-then-route logic to the
+*prefill* side of disaggregated serving: per wave it weighs shipping
+shadow prefills to the dedicated prefill group (remote prefill rate +
+the KV-transfer hop priced by the edge's LinkModel) against PR-4 local
+shadow prefill (the live ``t_prefill_overlap_s`` rate), falling back to
+local whenever the group is absent, dead, or simply slower.
 """
 from __future__ import annotations
 
@@ -195,6 +202,148 @@ class TaskScheduler:
         return OffloadDecision(offload=sv.r > 1e-3, split_ratio=sv.r,
                                predicted_time=float(t_opt),
                                reason="solved-star", split=sv)
+
+
+# ---------------------------------------------------------------------------
+# Prefill-offload routing for disaggregated serving
+# ---------------------------------------------------------------------------
+@dataclass
+class PrefillRoute:
+    """One wave's prefill-placement decision with its priced costs."""
+    remote: bool                 # ship shadow prefills to the prefill group
+    t_local_s: float             # priced local shadow prefill, s/request
+    t_remote_s: float            # priced remote prefill + KV hop, s/request
+    reason: str
+
+
+class PrefillRouter:
+    """Prices prefill-offload vs. local shadow prefill from live timings.
+
+    The decision rule is deliberately conservative and deterministic
+    (hypothesis-tested in ``tests/test_prefill_routing.py``):
+
+    * no prefill group / group down  →  local, always;
+    * nothing measured yet           →  remote (explore: the group can
+      only be priced by sending it work), UNLESS the analytically priced
+      KV-transfer hop alone already exceeds the measured local rate;
+    * remote measured, local never   →  ONE local probe wave (a healthy
+      session otherwise offloads every wave and the local side of the
+      comparison would stay unmeasured forever);
+    * both rates measured            →  remote iff
+      ``remote_rate + hop_rate <= margin · local_rate``, with one local
+      probe wave every ``probe_every`` consecutive remote waves so the
+      local rate tracks load drift instead of freezing (the same
+      never-go-fully-dark rationale as the split controller's
+      exploration floor).
+
+    Rates are EWMA-smoothed per shadow prefill; the hop uses the measured
+    per-block transfer rate once one exists, else the LinkModel price for
+    ``payload_bytes`` (set from the first observed block size).  A
+    reported fallback (the worker died mid-wave) latches the router to
+    local until ``revive()``.
+    """
+
+    def __init__(self, link=None, *, payload_bytes: float = 0.0,
+                 distance: float = 1.0, ema: float = 0.3,
+                 margin: float = 1.0, probe_every: int = 8):
+        self.link = link
+        self.payload_bytes = float(payload_bytes)
+        self.distance = float(distance)
+        self.ema = float(ema)
+        self.margin = float(margin)
+        self.probe_every = int(probe_every)
+        self.rate_local: Optional[float] = None    # s per local shadow
+        self.rate_remote: Optional[float] = None   # s per remote shadow
+        self.rate_transfer: Optional[float] = None  # s per KV block hop
+        self.healthy = True
+        self._remote_streak = 0    # consecutive remote waves since the
+                                   # local rate was last measured
+        self.history: List[PrefillRoute] = []
+
+    def _ewma(self, old: Optional[float], new: float) -> float:
+        return new if old is None else (1 - self.ema) * old + self.ema * new
+
+    def hop_price(self) -> float:
+        """Priced KV-transfer hop per block: measured EWMA when one
+        exists, else the LinkModel latency for ``payload_bytes``."""
+        if self.rate_transfer is not None:
+            return self.rate_transfer
+        if self.link is None or self.payload_bytes <= 0.0:
+            return 0.0
+        from repro.core.network import offload_latency
+        return float(offload_latency(self.link, self.payload_bytes,
+                                     self.distance))
+
+    def observe(self, *, local_s: float = 0.0, n_local: int = 0,
+                remote_s: float = 0.0, n_remote: int = 0,
+                transfer_s: float = 0.0, n_transfers: Optional[int] = None,
+                payload_bytes: float = 0.0, fallbacks: int = 0) -> None:
+        """Fold one wave's measured prefill timings into the EWMAs.
+
+        ``local_s``/``remote_s`` are the wave's shadow-dispatch walls
+        (``t_prefill_overlap_s``) and ``n_local``/``n_remote`` MUST count
+        only the dispatches that wall covers (the engine times top-up
+        shadows; inline boundary dispatches live in a different bucket) —
+        mixing counts deflates one rate and biases the comparison.
+        ``transfer_s`` is the wave's priced KV hops over ``n_transfers``
+        transferred blocks (defaults to ``n_remote``; pass it when the
+        wave also transferred inline-dispatched blocks).  Any reported
+        fallback marks the prefill group down."""
+        if n_local > 0:
+            self.rate_local = self._ewma(self.rate_local, local_s / n_local)
+        if n_remote > 0:
+            self.rate_remote = self._ewma(self.rate_remote,
+                                          remote_s / n_remote)
+        nt = n_remote if n_transfers is None else n_transfers
+        if nt > 0:
+            self.rate_transfer = self._ewma(self.rate_transfer,
+                                            transfer_s / nt)
+            if payload_bytes > 0.0:
+                self.payload_bytes = payload_bytes / nt
+        if fallbacks > 0:
+            self.healthy = False
+
+    def revive(self) -> None:
+        """Re-arm a latched-down router (the group came back)."""
+        self.healthy = True
+
+    def route(self) -> PrefillRoute:
+        """Decide this wave's prefill placement from the live prices."""
+        hop = self.hop_price()
+        if self.link is None:
+            dec = PrefillRoute(False, self.rate_local or 0.0, float("inf"),
+                               "no prefill group")
+        elif not self.healthy:
+            dec = PrefillRoute(False, self.rate_local or 0.0, float("inf"),
+                               "prefill group down")
+        elif self.rate_local is None:
+            if self.rate_remote is None:
+                # cold start: nothing measured at all — price the group
+                dec = PrefillRoute(True, 0.0, hop,
+                                   "explore: no remote rate yet")
+            else:
+                # remote is priced but local never ran: probe it once or
+                # the comparison below would stay dead forever
+                dec = PrefillRoute(False, 0.0,
+                                   self.rate_remote + hop,
+                                   "probe: no local rate yet")
+        else:
+            # unmeasured remote exec prices optimistically at 0 so the
+            # hop alone can veto exploration
+            t_remote = (self.rate_remote or 0.0) + hop
+            if t_remote > self.margin * self.rate_local:
+                dec = PrefillRoute(False, self.rate_local, t_remote,
+                                   "kv-transfer hop prices out remote")
+            elif self.probe_every > 0 \
+                    and self._remote_streak >= self.probe_every:
+                dec = PrefillRoute(False, self.rate_local, t_remote,
+                                   "probe: refresh local rate")
+            else:
+                dec = PrefillRoute(True, self.rate_local, t_remote,
+                                   "remote cheaper")
+        self._remote_streak = self._remote_streak + 1 if dec.remote else 0
+        self.history.append(dec)
+        return dec
 
 
 # ---------------------------------------------------------------------------

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.core.network import LinkModel, offload_latency
 from repro.core.offload import NodeGroup, OffloadReport, split_counts
-from repro.core.scheduler import ControllerConfig, SplitRatioController
+from repro.core.scheduler import (ControllerConfig, PrefillRouter,
+                                  SplitRatioController)
 from repro.serving.engine import (ContinuousServingEngine, RequestOutput,
                                   ServeRequest)
 
@@ -83,10 +84,17 @@ class SplitVector:
 @dataclass
 class Topology:
     """Ordered node groups + per-edge links.  ``links[0]`` is None — the
-    hub's work never crosses a link; ``links[g]`` prices hub→group-g."""
+    hub's work never crosses a link; ``links[g]`` prices hub→group-g.
+
+    ``prefill_spoke`` (PR 5) marks one spoke as a *dedicated prefill
+    group*: it takes no decode waves — the serving runtime disaggregates
+    shadow prefills onto it and splices the resulting KV blocks back into
+    the decode groups' slots, pricing the KV-transfer hop with that
+    spoke's LinkModel."""
     groups: List[NodeGroup]
     links: List[Optional[LinkModel]]
     kind: str = "pair"
+    prefill_spoke: Optional[int] = None   # group index of the prefill group
 
     def __post_init__(self):
         if len(self.groups) < 2:
@@ -101,6 +109,13 @@ class Topology:
             # per-group engines and the telemetry — duplicates silently
             # drop groups from all three
             raise ValueError(f"group names must be unique, got {names}")
+        if self.prefill_spoke is not None:
+            ps = int(self.prefill_spoke)
+            if not 1 <= ps < len(self.groups):
+                raise ValueError(
+                    f"prefill_spoke must name a spoke (1..{len(self.groups) - 1}),"
+                    f" got {self.prefill_spoke} — the hub always decodes")
+            self.prefill_spoke = ps
 
     def __len__(self) -> int:
         return len(self.groups)
@@ -113,6 +128,25 @@ class Topology:
     def spokes(self) -> List[NodeGroup]:
         return self.groups[1:]
 
+    @property
+    def prefill_group(self) -> Optional[NodeGroup]:
+        """The dedicated prefill group, or None (PR-4 local shadow prefill)."""
+        if self.prefill_spoke is None:
+            return None
+        return self.groups[self.prefill_spoke]
+
+    @property
+    def prefill_link(self) -> Optional[LinkModel]:
+        """LinkModel pricing the KV-transfer hop back from the prefill group."""
+        if self.prefill_spoke is None:
+            return None
+        return self.links[self.prefill_spoke]
+
+    def decode_indices(self) -> List[int]:
+        """Group indices that take decode waves (everything but the
+        dedicated prefill spoke)."""
+        return [g for g in range(len(self.groups)) if g != self.prefill_spoke]
+
     @staticmethod
     def pair(primary: NodeGroup, auxiliary: NodeGroup,
              link: LinkModel) -> "Topology":
@@ -121,13 +155,23 @@ class Topology:
 
     @staticmethod
     def star(hub: NodeGroup, spokes: Sequence[NodeGroup],
-             links: Union[LinkModel, Sequence[LinkModel]]) -> "Topology":
+             links: Union[LinkModel, Sequence[LinkModel]],
+             prefill_spoke: Optional[Union[int, str]] = None) -> "Topology":
         """§VIII star: one hub, G−1 spokes, one link per spoke (a single
-        LinkModel is broadcast to every edge)."""
+        LinkModel is broadcast to every edge).  ``prefill_spoke`` (a group
+        index 1.., or a spoke's name) dedicates that spoke to
+        disaggregated prefill — it serves KV blocks, not decode waves."""
         spokes = list(spokes)
         if isinstance(links, LinkModel):
             links = [links] * len(spokes)
-        return Topology([hub, *spokes], [None, *links], kind="star")
+        if isinstance(prefill_spoke, str):
+            names = [hub.name] + [s.name for s in spokes]
+            if prefill_spoke not in names[1:]:
+                raise ValueError(f"no spoke named {prefill_spoke!r} "
+                                 f"(have {names[1:]})")
+            prefill_spoke = names.index(prefill_spoke)
+        return Topology([hub, *spokes], [None, *links], kind="star",
+                        prefill_spoke=prefill_spoke)
 
 
 # ---------------------------------------------------------------------------
@@ -160,6 +204,8 @@ class TaskSpec:
     payload_bytes_per_item: float
     max_new: Optional[int]        # per-task generation cap (None = only
                                   # each request's own max_new applies)
+    prefill_worker: Any = None    # PrefillWorker on the dedicated prefill
+                                  # group (None without a prefill_spoke)
 
 
 @dataclass
@@ -182,18 +228,28 @@ class HeteroRuntime:
         result = rt.serve(requests)        # ServeRequest.task routes each
         print(result.to_json(indent=2))
 
-    Requests are drained in arrival-order waves of ``2·slots·(G−1)``; each
-    wave is apportioned across groups by the live :class:`SplitVector`
-    (online controller: Eq. 4 when the topology is a pair, ``solve_star``
-    beyond), every group's continuous-batching engines drain their share
-    per task, and the measured per-group wall clocks feed back into the
-    controller for the next wave.
+    Requests are drained in arrival-order waves of ``2·slots·(D−1)``
+    (D = decode groups); each wave is apportioned across the decode
+    groups by the live :class:`SplitVector` (online controller: Eq. 4
+    when two groups decode, ``solve_star`` beyond), every group's
+    continuous-batching engines drain their share per task, and the
+    measured per-group wall clocks feed back into the controller for the
+    next wave.
+
+    A topology with a ``prefill_spoke`` disaggregates prefill: that spoke
+    takes no decode waves — instead every task gets a
+    :class:`~repro.serving.prefill.PrefillWorker` on it, and the
+    :class:`PrefillRouter` decides per wave whether shadow prefills ship
+    there (pricing the KV-transfer hop with the spoke's LinkModel) or
+    stay local, falling back to PR-4 local shadow prefill when the group
+    is absent, dead, or slower.
     """
 
     def __init__(self, topology: Topology, *, slots: int = 4,
                  max_len: int = 64, macro_steps: int = 8,
                  overlap_admission: bool = True,
                  controller: Optional[SplitRatioController] = None,
+                 prefill_router: Optional[PrefillRouter] = None,
                  link_distance: float = 1.0):
         self.topology = topology
         self.slots = slots
@@ -204,12 +260,37 @@ class HeteroRuntime:
         # shadow-slot speculative prefill behind the fused decode loop
         # (ignored on the macro_steps=0 per-token path)
         self.link_distance = link_distance
-        self.controller = controller or SplitRatioController(
-            ControllerConfig(update_every=2), n_groups=len(topology))
-        if self.controller.n_groups != len(topology):
-            raise ValueError(
-                f"controller is sized for {self.controller.n_groups} groups "
-                f"but the topology has {len(topology)}")
+        # decode waves are split over every group EXCEPT the dedicated
+        # prefill spoke (when one is marked) — that group serves KV blocks
+        self._decode = topology.decode_indices()
+        D = len(self._decode)
+        if D >= 2:
+            self.controller = controller or SplitRatioController(
+                ControllerConfig(update_every=2), n_groups=D)
+            if self.controller.n_groups != D:
+                raise ValueError(
+                    f"controller is sized for {self.controller.n_groups} "
+                    f"groups but the topology has {D} decode groups")
+        else:
+            # pure disaggregation (hub decodes, spoke prefills): there is
+            # nothing to split — the controller is bypassed
+            if controller is not None:
+                raise ValueError("a controller needs >= 2 decode groups; "
+                                 "this topology has 1 (hub only)")
+            self.controller = None
+        self.prefill_router: Optional[PrefillRouter] = None
+        if topology.prefill_spoke is not None:
+            if self.macro_steps == 0 or not self.overlap_admission:
+                raise ValueError(
+                    "a prefill_spoke needs the overlapped fused path "
+                    "(macro_steps > 0, overlap_admission=True) — "
+                    "otherwise the dedicated group would idle while its "
+                    "decode capacity is already carved out")
+            self.prefill_router = prefill_router or PrefillRouter(
+                topology.prefill_link, distance=link_distance)
+        elif prefill_router is not None:
+            raise ValueError("prefill_router given but the topology marks "
+                             "no prefill_spoke")
         self.tasks: Dict[str, TaskSpec] = {}
 
     # ------------------------------------------------------------------
@@ -224,14 +305,24 @@ class HeteroRuntime:
         if name in self.tasks:
             raise ValueError(f"task {name!r} already registered")
         ml = max_len or self.max_len
+        worker = None
+        pg = self.topology.prefill_group
+        if pg is not None:
+            from repro.serving.prefill import PrefillWorker
+            worker = PrefillWorker(cfg, params, device=pg.devices[0],
+                                   link=self.topology.prefill_link,
+                                   distance=self.link_distance,
+                                   name=pg.name)
         engines: Dict[str, ContinuousServingEngine] = {}
         first: Optional[ContinuousServingEngine] = None
         overlap = self.overlap_admission
-        for grp in self.topology.groups:
+        for gi in self._decode:
+            grp = self.topology.groups[gi]
             eng = ContinuousServingEngine(cfg, params, slots=self.slots,
                                           max_len=ml,
                                           macro_steps=self.macro_steps,
                                           overlap_admission=overlap,
+                                          prefill_worker=worker,
                                           share_from=first)
             engines[grp.name] = eng
             first = first or eng
@@ -239,7 +330,8 @@ class HeteroRuntime:
         if payload is None:
             payload = float(getattr(cfg, "d_model", 256)) * 2.0 * 16
         spec = TaskSpec(name=name, cfg=cfg, params=params, engines=engines,
-                        payload_bytes_per_item=payload, max_new=max_new)
+                        payload_bytes_per_item=payload, max_new=max_new,
+                        prefill_worker=worker)
         self.tasks[name] = spec
         return spec
 
@@ -266,21 +358,40 @@ class HeteroRuntime:
                        f"{len(self.tasks)} tasks are registered")
 
     def _split_for(self, n: int, split) -> Tuple[SplitVector, Tuple[int, ...]]:
-        """Resolve this wave's SplitVector + per-group counts.  ``split``:
-        None → live controller (with its exploration floor), scalar r or
-        SplitVector/sequence → fixed."""
-        G = len(self.topology)
+        """Resolve this wave's SplitVector + per-DECODE-group counts
+        (hub first; the dedicated prefill spoke takes no decode share).
+        ``split``: None → live controller (with its exploration floor),
+        scalar r or SplitVector/sequence → fixed."""
+        D = len(self._decode)
+        if D == 1:
+            # pure disaggregation: the hub is the only decode group — an
+            # explicit split is only accepted when it says exactly that
+            # (r=0 / all-hub); anything else is a misconfiguration, not
+            # something to silently ignore
+            if split is not None:
+                ok = (isinstance(split, (int, float))
+                      and float(split) == 0.0) \
+                    or (isinstance(split, SplitVector) and len(split) == 1) \
+                    or (not isinstance(split, (int, float, SplitVector))
+                        and len(tuple(split)) == 1)
+                if not ok:
+                    raise ValueError(
+                        f"split {split!r} given, but this topology has 1 "
+                        "decode group (pure disaggregation) — only "
+                        "split=None, 0.0 or a 1-element vector is valid")
+            return SplitVector((1.0,)), (n,)
         if split is None:
             counts = self.controller.split_counts(n)
             return SplitVector(self.controller.fractions), counts
         if isinstance(split, SplitVector):
             sv = split
         elif isinstance(split, (int, float)):
-            sv = SplitVector.from_r(float(split), G)
+            sv = SplitVector.from_r(float(split), D)
         else:
             sv = SplitVector(tuple(split))
-        if len(sv) != G:
-            raise ValueError(f"split has {len(sv)} fractions for {G} groups")
+        if len(sv) != D:
+            raise ValueError(f"split has {len(sv)} fractions for {D} "
+                             "decode groups")
         return sv, sv.counts(n)
 
     def warmup(self, requests: Sequence[ServeRequest]) -> None:
@@ -301,11 +412,19 @@ class HeteroRuntime:
               wave: Optional[int] = None, warm: bool = True,
               verbose: bool = False) -> ServeResult:
         """Drain a (possibly mixed-task) request stream through the
-        topology.  Returns outputs per task + structured telemetry."""
+        topology.  Returns outputs per task + structured telemetry.
+
+        With a dedicated prefill spoke, every wave first consults the
+        :class:`PrefillRouter`: shadow prefills are shipped to the prefill
+        group only while its priced cost (remote prefill + KV-transfer
+        hop) beats local shadow prefill AND the group is healthy — a
+        mid-wave failure falls back inside the engines (bit-identical
+        streams) and latches the router to local."""
         if not self.tasks:
             raise RuntimeError("no tasks registered — call add_task first")
-        G = len(self.topology)
-        wave = wave or 2 * self.slots * (G - 1)
+        decode = self._decode
+        D = len(decode)
+        wave = wave or 2 * self.slots * max(D - 1, 1)
         requests = list(requests)
         if warm and requests:
             self.warmup(requests[:max(len(self.tasks) * 2, 4)])
@@ -318,6 +437,9 @@ class HeteroRuntime:
         total_dispatches = 0
         total_stalls = 0
         total_overlap_s = 0.0
+        total_offloaded = 0
+        total_kv_s = 0.0
+        total_fallbacks = 0
         done = 0
         t_start = time.perf_counter()
         while done < len(requests):
@@ -325,27 +447,46 @@ class HeteroRuntime:
             done += len(chunk)
             sv, counts = self._split_for(len(chunk), split)
 
-            # partition: spokes take the front of the wave in topology
-            # order, the hub keeps the tail (PR 1's [aux; pri] layout)
-            shares: List[List[ServeRequest]] = [None] * G
+            route = None
+            if self.prefill_router is not None:
+                # a worker that died outside a counted wave (warmup, or a
+                # direct engine run) must still flip the route to local
+                if not any(spec.prefill_worker is not None
+                           and spec.prefill_worker.healthy
+                           for spec in self.tasks.values()):
+                    self.prefill_router.healthy = False
+                route = self.prefill_router.route()
+                for spec in self.tasks.values():
+                    for eng in spec.engines.values():
+                        eng.prefill_remote = route.remote
+
+            # partition: decode spokes take the front of the wave in
+            # topology order, the hub keeps the tail (PR 1's [aux; pri]
+            # layout); the prefill spoke takes no decode share
+            shares: List[List[ServeRequest]] = [None] * D
             lo = 0
-            for g in range(1, G):
-                shares[g] = chunk[lo:lo + counts[g]]
-                lo += counts[g]
+            for d in range(1, D):
+                shares[d] = chunk[lo:lo + counts[d]]
+                lo += counts[d]
             shares[0] = chunk[lo:]
 
             per_group: Dict[str, dict] = {}
-            t_group = [0.0] * G
-            t_link = [0.0] * G
-            toks_group = [0] * G
-            syncs_group = [0] * G
-            decode_s_group = [0.0] * G
-            dispatches_group = [0] * G
-            stalls_group = [0] * G
-            overlap_s_group = [0.0] * G
+            t_group = [0.0] * D
+            t_link = [0.0] * D
+            toks_group = [0] * D
+            syncs_group = [0] * D
+            decode_s_group = [0.0] * D
+            dispatches_group = [0] * D
+            stalls_group = [0] * D
+            overlap_s_group = [0.0] * D
+            offloaded_group = [0] * D
+            kv_s_group = [0.0] * D
+            fallback_group = [0] * D
+            shadow_group = [0] * D
             t0 = time.perf_counter()
-            for g, grp in enumerate(self.topology.groups):
-                share = shares[g]
+            for d, gi in enumerate(decode):
+                grp = self.topology.groups[gi]
+                share = shares[d]
                 by_task: Dict[str, List[ServeRequest]] = {}
                 for req in share:
                     by_task.setdefault(self._task_of(req), []).append(req)
@@ -356,25 +497,32 @@ class HeteroRuntime:
                     outs, st = spec.engines[grp.name].run(
                         self._capped(spec, reqs_t))
                     outputs[task].extend(outs)
-                    toks_group[g] += sum(len(o.tokens) for o in outs)
+                    toks_group[d] += sum(len(o.tokens) for o in outs)
                     payload += len(reqs_t) * spec.payload_bytes_per_item
-                    syncs_group[g] += st.host_syncs
-                    decode_s_group[g] += st.decode_s
-                    dispatches_group[g] += st.macro_dispatches
-                    stalls_group[g] += st.admission_stalls
-                    overlap_s_group[g] += st.t_prefill_overlap_s
-                t_group[g] = time.perf_counter() - tg0
-                if g > 0 and share:
-                    t_link[g] = float(offload_latency(
-                        self.topology.links[g], payload, self.link_distance))
+                    syncs_group[d] += st.host_syncs
+                    decode_s_group[d] += st.decode_s
+                    dispatches_group[d] += st.macro_dispatches
+                    stalls_group[d] += st.admission_stalls
+                    overlap_s_group[d] += st.t_prefill_overlap_s
+                    offloaded_group[d] += st.prefill_offloaded
+                    kv_s_group[d] += st.t_kv_transfer_s
+                    fallback_group[d] += st.prefill_fallbacks
+                    shadow_group[d] += st.shadow_prefills
+                t_group[d] = time.perf_counter() - tg0
+                if gi > 0 and share:
+                    t_link[d] = float(offload_latency(
+                        self.topology.links[gi], payload, self.link_distance))
                 per_group[grp.name] = {
-                    "n": len(share), "wall_s": t_group[g],
-                    "link_s": t_link[g], "tokens": toks_group[g],
-                    "host_syncs": syncs_group[g],
-                    "t_per_macro_step_s": decode_s_group[g]
-                    / dispatches_group[g] if dispatches_group[g] else 0.0,
-                    "t_prefill_overlap_s": overlap_s_group[g],
-                    "admission_stalls": stalls_group[g],
+                    "n": len(share), "wall_s": t_group[d],
+                    "link_s": t_link[d], "tokens": toks_group[d],
+                    "host_syncs": syncs_group[d],
+                    "t_per_macro_step_s": decode_s_group[d]
+                    / dispatches_group[d] if dispatches_group[d] else 0.0,
+                    "t_prefill_overlap_s": overlap_s_group[d],
+                    "admission_stalls": stalls_group[d],
+                    "prefill_offloaded": offloaded_group[d],
+                    "t_kv_transfer_s": kv_s_group[d],
+                    "prefill_fallbacks": fallback_group[d],
                     "tasks": {t: len(r) for t, r in by_task.items()}}
             wall = time.perf_counter() - t0
             total_tokens += sum(toks_group)
@@ -383,6 +531,9 @@ class HeteroRuntime:
             total_dispatches += sum(dispatches_group)
             total_stalls += sum(stalls_group)
             total_overlap_s += sum(overlap_s_group)
+            total_offloaded += sum(offloaded_group)
+            total_kv_s += sum(kv_s_group)
+            total_fallbacks += sum(fallback_group)
 
             rep = OffloadReport(
                 r=sv.r, n_local=counts[0],
@@ -391,13 +542,34 @@ class HeteroRuntime:
                 t_remote_s=max(t_group[1:], default=0.0),
                 t_offload_s=max(t_link[1:], default=0.0),
                 payload_bytes=0.0, e_offload_j=0.0,
-                group_names=tuple(g.name for g in self.topology.groups),
+                group_names=tuple(self.topology.groups[gi].name
+                                  for gi in decode),
                 n_group=tuple(counts), t_group_s=tuple(t_group),
                 t_link_s=tuple(t_link), host_syncs=sum(syncs_group),
                 admission_stalls=sum(stalls_group),
-                t_prefill_overlap_s=sum(overlap_s_group))
-            if split is None:
+                t_prefill_overlap_s=sum(overlap_s_group),
+                prefill_offloaded=sum(offloaded_group),
+                t_kv_transfer_s=sum(kv_s_group),
+                prefill_fallbacks=sum(fallback_group))
+            if split is None and self.controller is not None:
                 self.controller.observe(rep)
+            if self.prefill_router is not None:
+                # feed the router the wave's live prices.  The engines'
+                # t_prefill_overlap_s wall covers exactly the TOP-UP
+                # shadow dispatches (shadow_prefills), local and remote
+                # alike — so both rates divide that wall by the top-up
+                # count; inline boundary dispatches are excluded from
+                # both sides.  KV hops are per TRANSFERRED block
+                # (prefill_offloaded, inline offloads included).
+                n_off = sum(offloaded_group)
+                n_topup = sum(shadow_group)
+                self.prefill_router.observe(
+                    local_s=sum(overlap_s_group) if n_off == 0 else 0.0,
+                    n_local=n_topup if n_off == 0 else 0,
+                    remote_s=sum(overlap_s_group) if n_off else 0.0,
+                    n_remote=n_topup if n_off else 0,
+                    transfer_s=sum(kv_s_group), n_transfers=n_off,
+                    fallbacks=sum(fallback_group))
             waves_tel.append({
                 "wave": len(waves_tel), "n": len(chunk),
                 "split": [round(float(f), 4) for f in sv.fractions],
@@ -405,6 +577,11 @@ class HeteroRuntime:
                 "tokens": sum(toks_group),
                 "host_syncs": sum(syncs_group),
                 "admission_stalls": sum(stalls_group),
+                "prefill_route": ("remote" if route is not None
+                                  and route.remote else "local"),
+                "prefill_offloaded": sum(offloaded_group),
+                "t_kv_transfer_s": sum(kv_s_group),
+                "prefill_fallbacks": sum(fallback_group),
                 "per_group": per_group})
             if verbose:
                 counts_str = "/".join(str(c) for c in counts)
@@ -416,9 +593,11 @@ class HeteroRuntime:
         wall_total = time.perf_counter() - t_start
         for outs in outputs.values():
             outs.sort(key=lambda o: o.uid)
+        pg = self.topology.prefill_group
         telemetry = {
             "topology": self.topology.kind,
             "groups": [g.name for g in self.topology.groups],
+            "prefill_group": pg.name if pg is not None else "",
             "slots": self.slots,
             "macro_steps": self.macro_steps,
             "overlap_admission": self.overlap_admission,
@@ -434,8 +613,12 @@ class HeteroRuntime:
                 if total_dispatches else 0.0,
                 "t_prefill_overlap_s": total_overlap_s,
                 "admission_stalls": total_stalls,
+                "prefill_offloaded": total_offloaded,
+                "t_kv_transfer_s": total_kv_s,
+                "prefill_fallbacks": total_fallbacks,
                 "final_split": [round(float(f), 4) for f in (
-                    self.controller.fractions if split is None
+                    self.controller.fractions
+                    if split is None and self.controller is not None
                     else self._split_for(max(len(requests), 1),
                                          split)[0].fractions)],
             },

@@ -3,7 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto] \
         [--continuous] [--slots 4] [--macro-steps 8] \
-        [--no-overlap-admission] \
+        [--no-overlap-admission] [--prefill-group G] \
         [--topology pair|star] [--nodes N] [--telemetry-json out.json]
 
 Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
@@ -73,11 +73,18 @@ def partition_devices(devs: list, nodes: int) -> list:
     return slices
 
 
-def build_topology(kind: str, nodes: int) -> C.Topology:
+def build_topology(kind: str, nodes: int,
+                   prefill_group: Optional[int] = None) -> C.Topology:
     """Partition the visible devices into ``nodes`` groups (each falls back
     to sharing device 0 when the host has fewer devices — decision logic
     and accounting are identical).  Hub gets the Nano-class profile, spokes
-    the Xavier-class one, per the paper's testbed asymmetry."""
+    the Xavier-class one, per the paper's testbed asymmetry.
+
+    ``prefill_group`` (a spoke's group index, 1..nodes-1) dedicates that
+    spoke to disaggregated prefill: it takes no decode waves, shadow
+    prefills ship there and their KV blocks splice back over the edge's
+    link (PR 5).  On a pair this is *pure* disaggregation — the hub does
+    all decoding."""
     if nodes < 2:
         raise ValueError("--nodes must be >= 2 (hub + at least one spoke)")
     if kind == "pair" and nodes != 2:
@@ -88,8 +95,12 @@ def build_topology(kind: str, nodes: int) -> C.Topology:
                           slices[g], C.JETSON_XAVIER)
               for g in range(1, nodes)]
     if kind == "pair":
-        return C.Topology.pair(hub, spokes[0], C.WIFI_5GHZ)
-    return C.Topology.star(hub, spokes, C.WIFI_5GHZ)
+        topo = C.Topology.pair(hub, spokes[0], C.WIFI_5GHZ)
+        if prefill_group is not None:
+            topo = dataclasses.replace(topo, prefill_spoke=prefill_group)
+        return topo
+    return C.Topology.star(hub, spokes, C.WIFI_5GHZ,
+                           prefill_spoke=prefill_group)
 
 
 def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
@@ -141,6 +152,11 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
           f"({tot['host_syncs_per_token']:.3f}/token, K={macro_steps}), "
           f"{tot['admission_stalls']} admission stalls"
           f"{' (overlapped)' if overlap_admission else ''}")
+    if result.telemetry.get("prefill_group"):
+        print(f"disaggregated prefill[{result.telemetry['prefill_group']}]: "
+              f"{tot['prefill_offloaded']} offloaded, "
+              f"{tot['t_kv_transfer_s'] * 1e3:.2f}ms kv-transfer, "
+              f"{tot['prefill_fallbacks']} fallbacks")
     if telemetry_path:
         with open(telemetry_path, "w") as fh:
             fh.write(result.to_json(indent=2))
@@ -175,6 +191,12 @@ def main():
                     help="2-node pair (paper) or §VIII star")
     ap.add_argument("--nodes", type=int, default=None,
                     help="total node groups (default 2 for pair, 3 for star)")
+    ap.add_argument("--prefill-group", type=int, default=None,
+                    metavar="SPOKE",
+                    help="dedicate spoke SPOKE (group index 1..) to "
+                         "disaggregated prefill: shadow prefills ship "
+                         "there and KV blocks splice back over its link "
+                         "(continuous mode; requires --macro-steps > 0)")
     ap.add_argument("--telemetry-json", default=None, metavar="PATH",
                     help="write HeteroRuntime telemetry JSON here")
     args = ap.parse_args()
@@ -190,7 +212,11 @@ def main():
           f"{' kv=int8' if args.kv_int8 else ''} "
           f"topology={args.topology}/{nodes}")
 
-    topology = build_topology(args.topology, nodes)
+    if args.prefill_group is not None and not args.continuous:
+        ap.error("--prefill-group requires --continuous (disaggregated "
+                 "prefill rides the continuous overlapped-admission path)")
+    topology = build_topology(args.topology, nodes,
+                              prefill_group=args.prefill_group)
     P = args.prompt_len
     reqs = request_stream(cfg.vocab_size, n=args.requests, mean_prompt=P,
                           seed=0, frontend_tokens=cfg.frontend_tokens,

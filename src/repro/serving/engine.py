@@ -35,6 +35,14 @@ per iteration is the macro-step's token-block fetch (the spliced first
 tokens piggyback on it), and ``admission_stalls`` counts the boundaries
 where a shadow miss forced prefill onto the critical path (zero at steady
 state — shadows are kept topped up to the slot count).
+
+With a ``prefill_worker`` (PR 5, disaggregated prefill) the shadow
+prefills leave the decode group entirely: they dispatch onto the
+topology's dedicated prefill spoke, their KV blocks transfer back over
+the priced link at the boundary, and all admitted blocks splice in ONE
+donated cross-group program (:func:`splice_slot_caches`).  A prefill
+group that dies mid-run degrades to local shadow prefill with
+bit-identical streams — ``prefill_fallbacks`` records the recoveries.
 """
 from __future__ import annotations
 
@@ -325,6 +333,41 @@ def write_slot_cache(cfg, big_cache, prefill_cache, slot):
     return _merge_cache(cfg, big_cache, prefill_cache, upd)
 
 
+def splice_slot_caches(cfg, big_cache, blocks, slot_ids):
+    """Write M B=1 prefill caches into slots ``slot_ids`` of the big
+    decode cache in ONE fused program — the cross-group splice for
+    disaggregated prefill: a boundary with M admitted KV-transfer blocks
+    costs a single donated dispatch instead of M per-slot writes.
+
+    ``blocks`` is the list of M prefill-cache trees (or a pre-stacked
+    tree with leaves ``[L, M, P, ...]``); trace this whole function under
+    one ``jax.jit`` so the stack fuses with the scatter — stacking
+    outside jit costs one host dispatch per cache leaf.  The leaf scatter
+    is ``kernels/ops.splice_blocks`` — mesh-aware through
+    ``models/sharding.seq_shard_layout``, so the splice stays shard-local
+    on sequence-sharded meshes.  Int8 destinations quantize the bf16
+    blocks on the way, exactly like the per-slot write path
+    (:func:`write_slot_cache`) — the emitted bytes are identical, only
+    the dispatch count changes.
+    """
+    from repro.kernels.ops import splice_blocks
+
+    if isinstance(blocks, (list, tuple)):
+        blocks = stack_prefill_blocks(blocks)
+
+    def upd(dst, src):
+        return splice_blocks(dst, src, slot_ids)
+
+    return _merge_cache(cfg, big_cache, blocks, upd)
+
+
+def stack_prefill_blocks(caches):
+    """Stack M B=1 prefill caches on the slot axis (axis 1, after the
+    leading layer dim) into the ``blocks`` tree ``splice_slot_caches``
+    consumes."""
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches)
+
+
 @dataclass
 class ServeRequest:
     """One unit of work for the continuous-batching queue."""
@@ -365,6 +408,24 @@ class ContinuousStats:
                                        # on a prefill (shadow miss, or every
                                        # admission phase when not overlapped)
     shadow_prefills: int = 0           # speculative prefills dispatched
+    prefill_offloaded: int = 0         # shadows dispatched to the dedicated
+                                       # prefill group (disaggregated)
+    t_kv_transfer_s: float = 0.0       # priced KV-transfer hop total for
+                                       # blocks spliced back from the
+                                       # prefill group
+    prefill_fallbacks: int = 0         # prefill-group failures recovered by
+                                       # falling back to local shadow prefill
+
+
+@dataclass
+class _Shadow:
+    """One in-flight speculative prefill (shadow slot)."""
+    req: ServeRequest
+    logits: Any                        # last-token logits (in flight)
+    cache: Any                         # B=1 prefill cache; None for
+                                       # single-token requests (logits-only)
+    remote: bool = False               # lives on the dedicated prefill
+                                       # group until fetched
 
 
 @dataclass
@@ -414,22 +475,44 @@ class ContinuousServingEngine:
                  eos_id: Optional[int] = None,
                  macro_steps: int = 8,
                  overlap_admission: bool = True,
+                 prefill_worker: Optional[Any] = None,
                  share_from: Optional["ContinuousServingEngine"] = None):
         """`share_from`: another engine over the SAME cfg whose jitted
         prefill/step/slot-write/decode-loop programs this one reuses —
         jax.jit caches per function object, so sibling node-group engines
         would otherwise recompile byte-identical programs.  (Programs are
         traced with the mesh active at first call — don't share across
-        different mesh contexts.)"""
+        different mesh contexts.)
+
+        ``prefill_worker``: a :class:`repro.serving.prefill.PrefillWorker`
+        bound to the topology's dedicated prefill group.  On the
+        overlapped fused path, shadow prefills are then dispatched to the
+        prefill group instead of the decode group and their KV blocks
+        spliced back at macro boundaries (disaggregated prefill); if the
+        worker dies or ``prefill_remote`` is False the engine falls back
+        to PR-4 local shadow prefill with bit-identical token streams."""
         self.cfg, self.params = cfg, params
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.macro_steps = int(macro_steps)
         self.overlap_admission = bool(overlap_admission)
+        self.prefill_worker = prefill_worker
+        if prefill_worker is not None and (
+                self.macro_steps == 0 or not self.overlap_admission):
+            # only the overlapped fused path consults the worker — a
+            # silently idle prefill group is a misconfiguration, not a
+            # fallback
+            raise ValueError(
+                "disaggregated prefill (prefill_worker=) requires the "
+                "overlapped fused path: macro_steps > 0 and "
+                "overlap_admission=True")
+        self.prefill_remote = prefill_worker is not None  # routing flag the
+        # PrefillRouter flips per wave (True = disaggregate when healthy)
         self._use_pallas = resolve_use_pallas(use_pallas)
         if share_from is not None and share_from.cfg is cfg:
             self.prefill = share_from.prefill
             self.step = share_from.step
             self._write_slot = share_from._write_slot
+            self._splice_slots = share_from._splice_slots
             self._loops = share_from._loops
         else:
             self.prefill = jax.jit(
@@ -439,6 +522,17 @@ class ContinuousServingEngine:
                 donate_argnums=(1,))
             self._write_slot = jax.jit(
                 lambda big, pre, slot: write_slot_cache(cfg, big, pre, slot),
+                donate_argnums=(0,))
+            # fused cross-group splice: takes the LIST of M block trees so
+            # the stack traces into the same program as the scatter (one
+            # dispatch per boundary).  Donates the big cache; the blocks
+            # are consumed too, but their [1,P,..] shapes can alias no
+            # output, so XLA donation would be a no-op warning — the
+            # fault tier instead hard-deletes them after the call to
+            # enforce the consumed-after-splice invariant
+            self._splice_slots = jax.jit(
+                lambda big, blocks, ids: splice_slot_caches(cfg, big,
+                                                            blocks, ids),
                 donate_argnums=(0,))
             self._loops: Dict[Tuple[int, Optional[int]], Any] = {}
         self._offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
@@ -669,15 +763,25 @@ class ContinuousServingEngine:
         slot to free.  Token streams are bit-identical to the boundary and
         per-step schedules: each slot attends only to its own positions,
         and admission still lands at macro-step boundaries.
+
+        With a ``prefill_worker`` (disaggregated prefill), shadows are
+        dispatched onto the dedicated prefill group instead and their KV
+        blocks transferred back ("localized") at the boundary, then all
+        admitted blocks — remote and local alike — are spliced in ONE
+        donated cross-group splice (``splice_slot_caches``) instead of M
+        per-slot writes.  A worker failure at dispatch or fetch falls
+        back to local shadow prefill for that request and all later ones:
+        ``prefill_fallbacks`` counts the recoveries, the streams do not
+        change.
         """
         from repro.kernels.ops import admit_slots
 
         cfg = self.cfg
         K = self.macro_steps
         eos = self.eos_id
+        worker = self.prefill_worker
         pending = deque(requests)
-        # in-flight speculative prefills: (request, last_logits, cache)
-        shadows: deque = deque()
+        shadows: deque = deque()          # in-flight speculative prefills
         slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
         lengths = jnp.zeros((self.slots,), jnp.int32)
         cur_tok = jnp.zeros((self.slots,), jnp.int32)
@@ -689,18 +793,66 @@ class ContinuousServingEngine:
         step_no = 0
         busy_acc = 0.0
         t_prefill = t_decode = t_overlap = 0.0
+        t_kv_transfer = 0.0
         host_syncs = dispatches = stalls = n_shadow = 0
+        n_offloaded = n_fallbacks = 0
 
-        def _dispatch_shadow():
-            req = pending.popleft()
+        def _worker_error():
+            from repro.serving.prefill import PrefillWorkerError
+            return PrefillWorkerError
+
+        def _use_remote() -> bool:
+            return (worker is not None and self.prefill_remote
+                    and worker.healthy)
+
+        def _prefill_batch(req: ServeRequest):
             batch = {"tokens": jnp.asarray(req.prompt[None])}
             if req.frontend is not None:
                 batch["frontend"] = jnp.asarray(req.frontend[None])
-            last_logits, pre_cache = self.prefill(self.params, batch)
+            return batch
+
+        def _dispatch_shadow():
+            nonlocal n_offloaded, n_fallbacks
+            req = pending.popleft()
+            batch = _prefill_batch(req)
             # a single-token request never touches a slot: park only its
             # logits, so speculative singles cost no cache memory
-            shadows.append((req, last_logits,
-                            None if req.max_new <= 1 else pre_cache))
+            if _use_remote():
+                try:
+                    last_logits, pre_cache = worker.dispatch(batch)
+                    shadows.append(_Shadow(
+                        req, last_logits,
+                        None if req.max_new <= 1 else pre_cache,
+                        remote=True))
+                    n_offloaded += 1
+                    return
+                except _worker_error():
+                    n_fallbacks += 1    # group died: this and every later
+                                        # shadow prefills locally
+            last_logits, pre_cache = self.prefill(self.params, batch)
+            shadows.append(_Shadow(req, last_logits,
+                                   None if req.max_new <= 1 else pre_cache))
+
+        def _localize(sh: _Shadow) -> Tuple[_Shadow, int]:
+            """Bring a shadow's block onto the decode group: the KV
+            transfer hop for remote shadows (priced via the worker's
+            LinkModel), a no-op for local ones.  A fetch failure (group
+            died after dispatch — possibly after earlier blocks were
+            already admitted) re-prefills locally; the redo is EXPOSED
+            prefill, so the caller counts it like a shadow miss."""
+            nonlocal t_kv_transfer, n_fallbacks
+            if not sh.remote:
+                return sh, 0
+            try:
+                logits, blk, t_hop = worker.fetch(sh.logits, sh.cache)
+                t_kv_transfer += t_hop
+                return _Shadow(sh.req, logits, blk), 0
+            except _worker_error():
+                n_fallbacks += 1
+                logits, pre = self.prefill(self.params,
+                                           _prefill_batch(sh.req))
+                return _Shadow(sh.req, logits,
+                               None if sh.req.max_new <= 1 else pre), 1
 
         def _eos_done(s: _Slot) -> bool:
             return bool(s.tokens) and eos is not None and s.tokens[-1] == eos
@@ -712,14 +864,15 @@ class ContinuousServingEngine:
             live_before = any(s.busy for s in slot_states)
             inline = 0
             newly: List[Tuple[int, ServeRequest, Any]] = []
+            blocks: List[Any] = []
             # singles need no slot: flush every parked one at each
             # boundary so they can never pile up in (or starve) the
             # shadow queue — they complete from their prefill logits at
             # the await below
-            singles: List[Tuple[ServeRequest, Any]] = [
-                (r, ll) for r, ll, _pc in shadows if r.max_new <= 1]
+            singles: List[_Shadow] = [sh for sh in shadows
+                                      if sh.req.max_new <= 1]
             if singles:
-                fillers = [e for e in shadows if e[0].max_new > 1]
+                fillers = [sh for sh in shadows if sh.req.max_new > 1]
                 shadows.clear()
                 shadows.extend(fillers)
             free = (i for i, s in enumerate(slot_states) if not s.busy)
@@ -730,25 +883,51 @@ class ContinuousServingEngine:
                         break
                     _dispatch_shadow()   # shadow miss: prefill exposed
                     inline += 1
-                req, last_logits, pre_cache = shadows.popleft()
-                if req.max_new <= 1:
+                sh = shadows.popleft()
+                if sh.req.max_new <= 1:
                     # single-token request: its one token is the prefill
                     # argmax — complete it without consuming the slot or
                     # riding a (frozen) macro-step
-                    singles.append((req, last_logits))
+                    singles.append(sh)
                     continue
-                cache = self._write_slot(cache, pre_cache, slot)
-                newly.append((slot, req, last_logits))
+                sh, exposed = _localize(sh)
+                inline += exposed
+                newly.append((slot, sh.req, sh.logits))
+                blocks.append(sh.cache)
                 slot = next(free, None)
+            if singles:
+                # localize BEFORE the stall accounting below: a fetch
+                # failure here re-prefills on the boundary critical path,
+                # which is exposed prefill exactly like a slot shadow's
+                flushed = []
+                for sh in singles:
+                    sh, exposed = _localize(sh)   # logits-only transfer
+                    inline += exposed
+                    flushed.append(sh)
+                singles = flushed
             if inline and live_before:
                 stalls += 1     # decode waited on an un-overlapped prefill
             single_dev = None
             if singles:
                 single_dev = jnp.argmax(jnp.concatenate(
-                    [ll for _, ll in singles], axis=0),
+                    [sh.logits for sh in singles], axis=0),
                     axis=-1).astype(jnp.int32)
             first_dev = None
             if newly:
+                if worker is not None:
+                    # disaggregated mode: ONE donated cross-group splice
+                    # for all admitted blocks (KV transfers and fallback-
+                    # local shadows alike) — a boundary costs one cache
+                    # dispatch instead of one per slot
+                    cache = self._splice_slots(
+                        cache, tuple(blocks),
+                        jnp.asarray([n[0] for n in newly], jnp.int32))
+                else:
+                    # PR-4 local-shadow baseline: per-slot donated writes
+                    # (kept byte-for-byte as the A/B arm the benchmark
+                    # gates the disaggregated path against)
+                    for (slot, _req, _ll), blk in zip(newly, blocks):
+                        cache = self._write_slot(cache, blk, slot)
                 cur_tok, lengths, remaining, done, first_dev = admit_slots(
                     cur_tok, lengths, remaining, done,
                     jnp.asarray([n[0] for n in newly], jnp.int32),
@@ -782,8 +961,8 @@ class ContinuousServingEngine:
             # back on the critical path.  At most `slots` B=1 prefill
             # caches are parked; parked singles hold logits only.
             t0o = time.perf_counter()
-            while pending and sum(1 for r, _l, _c in shadows
-                                  if r.max_new > 1) < self.slots:
+            while pending and sum(1 for sh in shadows
+                                  if sh.req.max_new > 1) < self.slots:
                 _dispatch_shadow()
                 n_shadow += 1
             dt_overlap = time.perf_counter() - t0o
@@ -802,9 +981,9 @@ class ContinuousServingEngine:
                     slot_states[slot].tokens.append(int(first))
             if single_dev is not None:
                 host_syncs += 1
-                for (req, _), first in zip(singles, np.asarray(single_dev)):
+                for sh, first in zip(singles, np.asarray(single_dev)):
                     outputs.append(RequestOutput(
-                        uid=req.uid,
+                        uid=sh.req.uid,
                         tokens=np.asarray([int(first)], np.int32),
                         admitted_step=boundary_step,
                         finished_step=boundary_step))
@@ -839,6 +1018,9 @@ class ContinuousServingEngine:
             t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
             else 0.0,
             t_prefill_overlap_s=t_overlap, admission_stalls=stalls,
-            shadow_prefills=n_shadow)
+            shadow_prefills=n_shadow,
+            prefill_offloaded=n_offloaded,
+            t_kv_transfer_s=t_kv_transfer,
+            prefill_fallbacks=n_fallbacks)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats

@@ -1,0 +1,168 @@
+"""Disaggregated prefill: a client for the dedicated prefill node group.
+
+PR 4 overlapped shadow prefills with decode, but both still ran on the
+*same* device group — every speculative B=1 prefill steals a dispatch
+slot from the decode hot path.  ``PrefillWorker`` moves that work onto a
+dedicated prefill group (``Topology.prefill_spoke``): prefill programs
+are jitted against the prefill group's device, dispatched asynchronously
+(dispatch-all-then-await, the OffloadEngine pattern — a dispatch never
+blocks), and the finished KV block is *transferred* back to the decode
+group at the macro boundary, where the engine splices it into a freed
+slot with the fused cross-group splice (``kernels/ops.splice_blocks``).
+The KV-transfer hop is priced with the topology edge's LinkModel
+(``t_kv_transfer_s`` in telemetry) so the routing controller can weigh
+prefill-offload against PR-4 local shadow prefill from live timings.
+
+Failure semantics are explicit because a remote group can die mid-run:
+``dispatch``/``fetch`` raise :class:`PrefillWorkerError` (or its
+``PrefillWorkerTimeout`` subclass) once the worker is ``kill()``ed or an
+injected fault fires, and the serving engine falls back to local shadow
+prefill for that request and every one after — token streams are
+bit-identical either way, only ``prefill_fallbacks`` records the event.
+``inject_fault`` is the chaos-test hook (``tests/test_prefill_faults.py``)
+that makes the fallback path enforceable in CI rather than a code path
+that only ever runs during a real outage.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+# NOTE: repro.core is imported lazily inside methods — repro.core.__init__
+# re-exports this module, so a top-level import here would be circular.
+from repro.serving.engine import make_prefill_step, resolve_use_pallas
+
+
+class PrefillWorkerError(RuntimeError):
+    """The prefill group is unreachable (killed, crashed, partitioned)."""
+
+
+class PrefillWorkerTimeout(PrefillWorkerError):
+    """The prefill group did not answer within its deadline."""
+
+
+def _tree_bytes(tree: Any) -> float:
+    """Total payload bytes of a pytree of arrays (the KV-transfer size)."""
+    return float(sum(leaf.size * leaf.dtype.itemsize
+                     for leaf in jax.tree.leaves(tree)
+                     if hasattr(leaf, "dtype")))
+
+
+class PrefillWorker:
+    """One task's prefill client for the dedicated prefill group.
+
+    ``dispatch(batch)`` launches the jitted prefill on the prefill
+    group's device and returns the (still in-flight) ``(logits, cache)``
+    handles; ``fetch`` moves a finished block to the decode group's
+    device and returns the priced KV-transfer latency.  The worker owns a
+    device-pinned copy of the params (a no-copy alias when both groups
+    share a device, as on CI hosts).
+
+    ``healthy`` goes False on ``kill()`` or when an injected fault fires;
+    every later call raises, and the engine stops routing prefills here.
+    """
+
+    def __init__(self, cfg, params, *, device, link=None,
+                 distance: float = 1.0, name: str = "prefill",
+                 use_pallas="auto"):
+        self.cfg = cfg
+        self.name = name
+        self.link = link
+        self.distance = float(distance)
+        # Inside an activation_sharding mesh the prefill program must run
+        # mesh-wide like every other program (a single-device pin would
+        # fight the sharding constraints) — the prefill group is then an
+        # accounting entity, exactly like decode groups on shared devices.
+        from repro.models.sharding import active_mesh
+        if active_mesh() is not None:
+            device = None
+        self.device = device
+        # placement by committed params, NOT jit(device=...): the
+        # deprecated device= path re-validates/commits every param leaf
+        # on every dispatch (~10% per-call overhead at these model
+        # sizes); committing the params once pins the computation to the
+        # prefill device with zero per-call cost
+        self.params = params if device is None \
+            else jax.device_put(params, device)
+        self._prefill = jax.jit(
+            make_prefill_step(cfg, use_pallas=resolve_use_pallas(use_pallas)))
+        self.healthy = True
+        self._fault: Optional[Tuple[str, int, type]] = None
+        self._calls = {"dispatch": 0, "fetch": 0}
+        self._payload_cache: dict = {}   # tree-structure id -> bytes (every
+        # block of a task has identical shapes, so walk the tree once)
+        # accounting the router / telemetry read back
+        self.dispatched = 0
+        self.transferred_bytes = 0.0
+
+    # -- chaos hooks ----------------------------------------------------
+    def kill(self) -> None:
+        """Simulate losing the prefill group (node crash / partition)."""
+        self.healthy = False
+
+    def inject_fault(self, kind: str = "dispatch", *, after: int = 0,
+                     timeout: bool = False) -> None:
+        """Arm a one-shot fault: the (``after``+1)-th ``kind`` call kills
+        the worker and raises (``PrefillWorkerTimeout`` when ``timeout``).
+        Chaos-test hook — production code never arms it."""
+        if kind not in self._calls:
+            raise ValueError(f"kind must be one of {sorted(self._calls)}")
+        err = PrefillWorkerTimeout if timeout else PrefillWorkerError
+        self._fault = (kind, int(after), err)
+
+    def _check(self, kind: str) -> None:
+        if not self.healthy:
+            raise PrefillWorkerError(
+                f"prefill group {self.name!r} is down")
+        self._calls[kind] += 1
+        if self._fault is not None and self._fault[0] == kind \
+                and self._calls[kind] > self._fault[1]:
+            err = self._fault[2]
+            self.healthy = False
+            raise err(f"prefill group {self.name!r} "
+                      f"{'timed out' if err is PrefillWorkerTimeout else 'died'}"
+                      f" on {kind} #{self._calls[kind]}")
+
+    # -- hot path -------------------------------------------------------
+    def dispatch(self, batch) -> Tuple[Any, Any]:
+        """Launch one B=1 prefill on the prefill group (async dispatch —
+        returns in-flight handles, never blocks)."""
+        self._check("dispatch")
+        out = self._prefill(self.params, batch)
+        self.dispatched += 1
+        return out
+
+    def fetch(self, logits, cache=None, *, target=None):
+        """Transfer a finished block back to the decode group.
+
+        Returns ``(logits, cache, t_kv_transfer_s)`` with both arrays on
+        ``target`` (the decode group's device; None = the default device)
+        and the transfer hop priced by the edge's LinkModel over the
+        block's actual byte size.  Raises if the group died in flight.
+        """
+        self._check("fetch")
+        key = (tuple(logits.shape),
+               None if cache is None
+               else tuple(jax.tree.leaves(cache)[0].shape))
+        payload = self._payload_cache.get(key)
+        if payload is None:
+            payload = _tree_bytes(logits) + (_tree_bytes(cache)
+                                             if cache is not None else 0.0)
+            self._payload_cache[key] = payload
+        tgt = target
+        if tgt is None and self.device is not None:
+            tgt = jax.devices()[0]
+        if tgt is not None and tgt != self.device:
+            # an actual cross-device move; co-located groups (CI hosts,
+            # mesh-wide workers) skip the copy — the hop is still PRICED
+            # below, exactly like the engine's simulated link latencies
+            logits = jax.device_put(logits, tgt)
+            cache = jax.device_put(cache, tgt) if cache is not None \
+                else None
+        self.transferred_bytes += payload
+        t_hop = 0.0
+        if self.link is not None:
+            from repro.core.network import offload_latency
+            t_hop = float(offload_latency(self.link, payload, self.distance))
+        return logits, cache, t_hop

@@ -16,6 +16,13 @@ Any code path that then touches a consumed buffer raises
 ``Array has been deleted`` instead of silently reading stale memory.
 The engines must run every schedule end-to-end under this poisoning and
 still produce the reference token streams.
+
+PR 5 adds the fused cross-group splice (``_splice_slots``): it donates
+the big cache, and its stacked KV-transfer blocks are consumed-by-
+contract (their [L,M,P,...] shape can alias no output, so XLA donation
+would be a silent no-op — poisoning deletes them anyway, proving the
+engine never touches a spliced block or a transferred shadow cache
+again, on CPU too).
 """
 import dataclasses
 
@@ -28,6 +35,8 @@ from repro.kernels import ops as ops_mod
 from repro.models import model as M
 from repro.serving.engine import (ContinuousServingEngine, ServeRequest,
                                   ServingEngine)
+
+pytestmark = pytest.mark.slow   # chaos tier: CI runs it as its own job
 
 
 def _poison(fn, argnums):
@@ -50,6 +59,11 @@ def _poison_engine(eng):
     eng.step = _poison(eng.step, (1,))             # per-step: cache
     if hasattr(eng, "_write_slot"):                # continuous: big cache
         eng._write_slot = _poison(eng._write_slot, (0,))
+    if hasattr(eng, "_splice_slots"):              # fused cross-group
+        # splice: big cache (donated) AND the stacked KV-transfer blocks
+        # (consumed-by-contract — deleting them proves the engine never
+        # reuses a transferred shadow cache after its splice)
+        eng._splice_slots = _poison(eng._splice_slots, (0, 1))
     orig_get = eng._get_loop
 
     def get_loop(K, *a):
@@ -108,11 +122,24 @@ def test_continuous_schedules_never_reuse_donated(arch, kv_int8,
 
     for kwargs in ({"macro_steps": 0},
                    {"macro_steps": 4, "overlap_admission": False},
-                   {"macro_steps": 4, "overlap_admission": True}):
+                   {"macro_steps": 4, "overlap_admission": True},
+                   {"macro_steps": 4, "overlap_admission": True,
+                    "remote": True}):
+        kwargs = dict(kwargs)
+        if kwargs.pop("remote", False):
+            # disaggregated prefill: the spliced blocks are KV transfers
+            # from the prefill group — poisoning must prove those are
+            # never reused either
+            from repro.serving.prefill import PrefillWorker
+            import repro.core as C
+            kwargs["prefill_worker"] = PrefillWorker(
+                cfg, params, device=jax.devices()[0], link=C.ICI_LINK)
         eng = _poison_engine(ContinuousServingEngine(
             cfg, params, slots=2, max_len=48, share_from=clean, **kwargs))
         outs, stats = eng.run(reqs)
         assert stats.total_tokens == sum(r.max_new for r in reqs), kwargs
+        if "prefill_worker" in kwargs:
+            assert stats.prefill_offloaded == len(reqs)
         for a, b in zip(ref, outs):
             np.testing.assert_array_equal(a.tokens, b.tokens,
                                           err_msg=str(kwargs))

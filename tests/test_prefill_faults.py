@@ -1,0 +1,202 @@
+"""Chaos tier: kill/timeout the dedicated prefill group and prove the
+engine degrades gracefully.
+
+Disaggregated prefill (PR 5) adds a remote dependency to the serving hot
+path: every shadow prefill now crosses to the prefill group and its KV
+block crosses back.  A real deployment WILL lose that group mid-run —
+node crash, network partition, rolling restart — so the fallback path is
+a correctness surface, not an edge case.  These tests arm the
+``PrefillWorker.inject_fault`` hook to kill the group at every stage of a
+request's life (at dispatch, at fetch after earlier blocks were already
+admitted, via timeout) and assert the two invariants the design promises:
+
+* token streams are BIT-IDENTICAL to the ``macro_steps=0`` per-step
+  reference — placement moves, tokens never do;
+* the fallback is *observable*: ``ContinuousStats.prefill_fallbacks`` /
+  the HeteroRuntime telemetry record every recovery, and the router
+  flips to local for later waves.
+
+Marked ``slow``: CI runs this file (with the donation-poisoning tier) as
+its own chaos job; the fast job excludes it via ``-m "not slow"``.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.configs.base import get_config, reduced
+from repro.models import model as M
+from repro.serving.engine import ContinuousServingEngine, ServeRequest
+from repro.serving.prefill import (PrefillWorker, PrefillWorkerError,
+                                   PrefillWorkerTimeout)
+
+pytestmark = pytest.mark.slow
+
+SLOTS = 2
+MAX_LEN = 48
+PROMPT = 8
+MAX_NEWS = [1, 6, 3, 1, 7, 4, 2, 5]   # churny: singles + mixed lengths
+
+
+@pytest.fixture(scope="module")
+def served():
+    """Shared cfg/params/requests + the per-step reference streams."""
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (len(MAX_NEWS), PROMPT)).astype(np.int32)
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=m)
+            for i, m in enumerate(MAX_NEWS)]
+    base = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                   macro_steps=0)
+    ref, _ = base.run(reqs)
+    return cfg, params, reqs, base, ref
+
+
+def _worker(cfg, params, **kw):
+    return PrefillWorker(cfg, params, device=jax.devices()[0],
+                         link=C.ICI_LINK, **kw)
+
+
+def _run_disaggregated(served, worker, macro_steps=4):
+    cfg, params, reqs, base, ref = served
+    eng = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                  macro_steps=macro_steps,
+                                  prefill_worker=worker, share_from=base)
+    outs, stats = eng.run(reqs)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert stats.total_tokens == sum(r.max_new for r in reqs)
+    return stats
+
+
+def test_healthy_group_serves_all_prefills(served):
+    """Control: with a healthy group every request's prefill is remote,
+    the KV hop is priced, and nothing falls back."""
+    cfg, params, reqs, *_ = served
+    stats = _run_disaggregated(served, _worker(cfg, params))
+    assert stats.prefill_offloaded == len(reqs)
+    assert stats.prefill_fallbacks == 0
+    assert stats.t_kv_transfer_s > 0.0
+    assert stats.admission_stalls == 0
+
+
+@pytest.mark.parametrize("after", [0, 2, 5])
+def test_kill_at_dispatch_mid_run(served, after):
+    """The group dies on its (after+1)-th dispatch — possibly before ANY
+    request was offloaded (after=0).  Every remaining prefill runs
+    locally, streams unchanged, the recovery is counted."""
+    cfg, params, reqs, *_ = served
+    w = _worker(cfg, params)
+    w.inject_fault("dispatch", after=after)
+    stats = _run_disaggregated(served, w)
+    assert not w.healthy
+    assert stats.prefill_offloaded == after          # only the pre-fault ones
+    assert stats.prefill_fallbacks >= 1
+    # fallback + local remainder must cover every request exactly once
+    assert stats.prefill_offloaded < len(reqs)
+
+
+@pytest.mark.parametrize("after", [1, 3])
+def test_kill_at_fetch_after_admission(served, after):
+    """The group dies at KV-transfer time, AFTER earlier blocks were
+    already admitted and decoded against: the engine re-prefills the
+    stranded shadows locally (one fallback each) without disturbing the
+    live slots' streams."""
+    cfg, params, reqs, *_ = served
+    w = _worker(cfg, params)
+    w.inject_fault("fetch", after=after)
+    stats = _run_disaggregated(served, w)
+    assert not w.healthy
+    assert stats.prefill_fallbacks >= 1
+    assert stats.prefill_offloaded > 0               # some blocks landed
+
+
+def test_timeout_raises_timeout_subclass_and_falls_back(served):
+    """A timeout is a PrefillWorkerTimeout (callers can distinguish it)
+    and degrades exactly like a crash."""
+    cfg, params, reqs, *_ = served
+    w = _worker(cfg, params)
+    w.inject_fault("fetch", after=0, timeout=True)
+    with pytest.raises(PrefillWorkerTimeout):
+        # the class contract, independent of the engine's catch
+        w2 = _worker(cfg, params)
+        w2.inject_fault("dispatch", after=0, timeout=True)
+        w2.dispatch({"tokens": np.ones((1, PROMPT), np.int32)})
+    stats = _run_disaggregated(served, w)
+    assert stats.prefill_fallbacks >= 1
+    assert not w.healthy
+
+
+def test_dead_from_start_is_pure_local_shadow(served):
+    """A worker that is already down routes every prefill locally without
+    churning through raise/catch per request — PR-4 behavior exactly."""
+    cfg, params, reqs, *_ = served
+    w = _worker(cfg, params)
+    w.kill()
+    stats = _run_disaggregated(served, w)
+    assert stats.prefill_offloaded == 0
+    assert stats.prefill_fallbacks == 0      # never even attempted
+    assert stats.admission_stalls == 0
+
+
+def test_every_fault_mode_matches_macro0_per_family(served):
+    """K sweep: the fallback path stays bit-identical across macro-step
+    widths (the fault lands at a different boundary each time)."""
+    cfg, params, reqs, *_ = served
+    for k in (1, 2, 4):
+        w = _worker(cfg, params)
+        w.inject_fault("dispatch", after=k)
+        stats = _run_disaggregated(served, w, macro_steps=k)
+        assert stats.prefill_fallbacks >= 1, k
+
+
+def test_runtime_telemetry_records_fallback_and_reroutes(served):
+    """HeteroRuntime level: kill the group between waves — telemetry
+    records the fallbacks, later waves route 'local', outputs match a
+    prefill-group-free session bit-for-bit."""
+    cfg, params, reqs, *_ = served
+    dev = jax.devices()[0]
+    star = C.Topology.star(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           [C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                            C.NodeGroup("pf", [dev], C.JETSON_XAVIER)],
+                           C.ICI_LINK, prefill_spoke="pf")
+    treqs = [ServeRequest(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                          task=cfg.name) for r in reqs]
+
+    plain = C.HeteroRuntime(
+        C.Topology.pair(star.groups[0], star.groups[1], C.WIFI_5GHZ),
+        slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    plain.add_task(cfg.name, cfg, params)
+    want = {o.uid: o.tokens
+            for o in plain.serve(treqs, split=0.5).outputs[cfg.name]}
+
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    spec = rt.add_task(cfg.name, cfg, params)
+    spec.prefill_worker.inject_fault("dispatch", after=2)
+    res = rt.serve(treqs, split=0.5, warm=False)
+    got = {o.uid: o.tokens for o in res.outputs[cfg.name]}
+    assert set(got) == set(want)
+    for uid in want:
+        np.testing.assert_array_equal(want[uid], got[uid])
+    tot = res.telemetry["totals"]
+    assert tot["prefill_fallbacks"] >= 1
+    assert tot["prefill_offloaded"] == 2
+    routes = [w["prefill_route"] for w in res.telemetry["waves"]]
+    assert routes[0] == "remote" and routes[-1] == "local", routes
+    assert res.telemetry["prefill_group"] == "pf"
+    assert not rt.prefill_router.healthy
+
+
+def test_killed_worker_raises_for_direct_callers(served):
+    """The worker API contract: calls on a dead worker raise
+    PrefillWorkerError (the engine's except clause is load-bearing)."""
+    cfg, params, *_ = served
+    w = _worker(cfg, params)
+    w.kill()
+    with pytest.raises(PrefillWorkerError):
+        w.dispatch({"tokens": np.ones((1, PROMPT), np.int32)})
+    with pytest.raises(PrefillWorkerError):
+        w.fetch(np.zeros((1, 4), np.float32))

@@ -1,0 +1,262 @@
+"""Property tests for the prefill-offload routing decision (PR 5).
+
+The :class:`~repro.core.scheduler.PrefillRouter` prices shipping shadow
+prefills to the dedicated prefill group (remote prefill rate + the
+KV-transfer hop) against PR-4 local shadow prefill.  The contract these
+properties pin down, over random star topologies × link speeds × busy
+factors:
+
+* the router NEVER picks prefill-offload when the priced remote cost
+  (including the hop — measured or LinkModel-analytic) exceeds the
+  measured local rate;
+* a dead group / reported fallback always routes local;
+* the star controller's re-solved :class:`SplitVector` fractions stay on
+  the simplex (non-negative, sum to one, right arity) no matter what
+  timings the waves feed it — the routing layer sits ON TOP of that
+  solve, so a broken simplex would corrupt every downstream decision.
+
+Runs under real hypothesis in CI (derandomized by the conftest profile)
+and under the deterministic ``_hypothesis_compat`` sampler elsewhere.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core as C
+from repro.core.network import LinkModel, offload_latency
+from repro.core.scheduler import ControllerConfig, PrefillRouter, \
+    SplitRatioController
+
+
+# ---------------------------------------------------------------------------
+# routing decision
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(local_rate=st.floats(1e-4, 10.0),
+       remote_rate=st.floats(1e-4, 10.0),
+       hop_rate=st.floats(0.0, 10.0),
+       n_obs=st.integers(1, 5))
+def test_never_remote_when_measured_price_is_higher(local_rate, remote_rate,
+                                                    hop_rate, n_obs):
+    """With both sides measured, remote is picked iff it is priced at or
+    below local — in particular NEVER when the KV hop makes it slower."""
+    router = PrefillRouter(C.ICI_LINK)   # hop price comes from the
+    # measured transfer EWMA below, not this link
+    for _ in range(n_obs):
+        router.observe(local_s=local_rate * 3, n_local=3)
+        router.observe(remote_s=remote_rate * 2, n_remote=2,
+                       transfer_s=hop_rate * 2)
+    dec = router.route()
+    priced_remote = router.rate_remote + router.rate_transfer
+    if dec.remote:
+        assert priced_remote <= router.rate_local * router.margin + 1e-12, \
+            (dec, priced_remote, router.rate_local)
+    else:
+        assert priced_remote > router.rate_local * router.margin - 1e-12, \
+            (dec, priced_remote, router.rate_local)
+    # the decision exposes the prices it was made from
+    assert dec.t_remote_s == pytest.approx(priced_remote)
+    assert dec.t_local_s == pytest.approx(router.rate_local)
+
+
+@settings(max_examples=60, deadline=None)
+@given(bandwidth=st.floats(1e3, 1e12),
+       payload=st.floats(1.0, 1e9),
+       local_rate=st.floats(1e-6, 10.0),
+       n_spokes=st.integers(1, 4))
+def test_cold_start_hop_veto_over_random_topologies(bandwidth, payload,
+                                                    local_rate, n_spokes):
+    """Cold start (remote exec never measured): the ANALYTIC LinkModel
+    price of the KV hop alone can veto exploration — the router offloads
+    only when the hop is at or below the whole measured local prefill.
+    The link comes from a randomly-built star topology's prefill edge,
+    so this also exercises the constructor flag across arities."""
+    dev = object()   # NodeGroup stores devices opaquely; never dispatched
+    link = LinkModel(bandwidth_hz=bandwidth, is_ici=True)
+    spokes = [C.NodeGroup(f"s{i}", [dev], C.JETSON_XAVIER)
+              for i in range(n_spokes)]
+    topo = C.Topology.star(C.NodeGroup("hub", [dev], C.JETSON_NANO),
+                           spokes, link, prefill_spoke=n_spokes)
+    assert topo.prefill_group is spokes[-1]
+    assert topo.decode_indices() == list(range(n_spokes))
+    router = PrefillRouter(topo.prefill_link, payload_bytes=payload)
+    router.observe(local_s=local_rate * 4, n_local=4)
+    dec = router.route()
+    hop = float(offload_latency(link, payload))
+    assert dec.remote == (hop <= router.rate_local * router.margin), \
+        (dec, hop, router.rate_local)
+
+
+@settings(max_examples=30, deadline=None)
+@given(local_rate=st.floats(1e-4, 1.0),
+       remote_rate=st.floats(1e-6, 1e-4))
+def test_fallback_latches_local_until_revived(local_rate, remote_rate):
+    """Even a wildly profitable remote price loses to a reported
+    fallback: a group that died stays routed-around until revive()."""
+    router = PrefillRouter(C.ICI_LINK)
+    router.observe(local_s=local_rate, n_local=1)
+    router.observe(remote_s=remote_rate, n_remote=1, transfer_s=0.0)
+    assert router.route().remote
+    router.observe(fallbacks=1)
+    dec = router.route()
+    assert not dec.remote and dec.reason == "prefill group down"
+    router.revive()
+    assert router.route().remote
+
+
+def test_no_prefill_group_routes_local_forever():
+    router = PrefillRouter(None)
+    router.observe(remote_s=1e-9, n_remote=1)
+    dec = router.route()
+    assert not dec.remote and dec.reason == "no prefill group"
+
+
+def test_cold_start_with_nothing_measured_explores():
+    """First wave of a fresh session: no local rate exists to compare
+    against, so the router must try the group once to price it."""
+    link = LinkModel(bandwidth_hz=50e9, is_ici=True)
+    dec = PrefillRouter(link).route()
+    assert dec.remote and dec.reason.startswith("explore")
+
+
+def test_remote_only_measurement_forces_local_probe():
+    """Once the remote side is priced but local never ran, the router
+    must probe local — otherwise a healthy session offloads every wave
+    and the price comparison stays dead forever."""
+    router = PrefillRouter(C.ICI_LINK)
+    assert router.route().remote                      # wave 0: explore
+    router.observe(remote_s=0.5, n_remote=1, transfer_s=0.0)
+    dec = router.route()                              # wave 1: probe
+    assert not dec.remote and dec.reason.startswith("probe")
+    # after the probe measures a (slower) local rate, pricing is live
+    router.observe(local_s=2.0, n_local=1)
+    assert router.route().remote
+
+
+@settings(max_examples=10, deadline=None)
+@given(probe_every=st.integers(1, 6))
+def test_periodic_probe_refreshes_local_rate(probe_every):
+    """A long healthy remote streak is interrupted by exactly one local
+    probe wave every probe_every routes, so the local EWMA keeps
+    tracking reality instead of freezing at its first measurement."""
+    router = PrefillRouter(C.ICI_LINK, probe_every=probe_every)
+    router.observe(local_s=2.0, n_local=1)
+    router.observe(remote_s=0.1, n_remote=1, transfer_s=0.0)
+    routes = []
+    for _ in range(3 * (probe_every + 1)):
+        dec = router.route()
+        routes.append(dec.remote)
+        if not dec.remote:
+            assert dec.reason.startswith("probe")
+            router.observe(local_s=2.0, n_local=1)    # the probe's wave
+    # exactly one local probe per (probe_every remote) cycle
+    assert routes.count(False) == 3
+    for i, r in enumerate(routes):
+        assert r == ((i + 1) % (probe_every + 1) != 0), (i, routes)
+
+
+# ---------------------------------------------------------------------------
+# star re-solve simplex invariants
+# ---------------------------------------------------------------------------
+def _report(n_group, t_group, t_link):
+    return C.OffloadReport(
+        r=1.0 - n_group[0] / max(sum(n_group), 1),
+        n_local=n_group[0], n_offloaded=sum(n_group[1:]),
+        t_local_s=t_group[0], t_remote_s=max(t_group[1:]),
+        t_offload_s=max(t_link[1:]), payload_bytes=0.0, e_offload_j=0.0,
+        group_names=tuple(f"g{i}" for i in range(len(n_group))),
+        n_group=tuple(n_group), t_group_s=tuple(t_group),
+        t_link_s=tuple(t_link))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_groups=st.integers(3, 5),
+       seed=st.integers(0, 10**6),
+       busy=st.floats(0.1, 8.0),
+       link_scale=st.floats(1e-4, 2.0))
+def test_star_resolve_keeps_simplex_invariants(n_groups, seed, busy,
+                                               link_scale, test_seed):
+    """Random per-group rates / link speeds / busy factors through enough
+    waves to trigger several re-solves: the controller's fractions must
+    stay a valid SplitVector (the routing layer consumes them as-is)."""
+    rng = np.random.default_rng(test_seed + seed)
+    ctl = SplitRatioController(ControllerConfig(update_every=2),
+                               n_groups=n_groups)
+    for _ in range(6):
+        n_group = rng.integers(1, 9, n_groups).tolist()
+        rates = rng.uniform(1e-3, busy, n_groups)
+        links = np.concatenate([[0.0],
+                                rng.uniform(0.0, link_scale, n_groups - 1)])
+        t_group = [float(r * n) for r, n in zip(rates, n_group)]
+        t_link = [float(l * n) for l, n in zip(links, n_group)]
+        ctl.observe(_report(n_group, t_group, t_link))
+        f = ctl.fractions
+        assert len(f) == n_groups
+        assert np.all(f >= -1e-9), f
+        assert abs(float(np.sum(f)) - 1.0) < 1e-6, f
+        sv = C.SplitVector(tuple(f))            # round-trips the simplex
+        assert 0.0 <= sv.r <= 1.0
+        counts = sv.counts(int(np.sum(n_group)))
+        assert sum(counts) == int(np.sum(n_group))
+        assert all(c >= 0 for c in counts)
+
+
+def test_misconfigurations_raise_loudly():
+    """A dedicated prefill group that could never be consulted (per-token
+    loop, boundary-blocking admission) must be rejected, and a pure-
+    disaggregation topology must not silently drop an explicit split."""
+    import jax
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    from repro.serving.engine import ContinuousServingEngine
+    from repro.serving.prefill import PrefillWorker
+
+    dev = jax.devices()[0]
+    topo = C.Topology.star(C.NodeGroup("hub", [dev], C.JETSON_NANO),
+                           [C.NodeGroup("s1", [dev], C.JETSON_XAVIER),
+                            C.NodeGroup("pf", [dev], C.JETSON_XAVIER)],
+                           C.ICI_LINK, prefill_spoke="pf")
+    with pytest.raises(ValueError, match="overlapped fused path"):
+        C.HeteroRuntime(topo, macro_steps=0)
+    with pytest.raises(ValueError, match="overlapped fused path"):
+        C.HeteroRuntime(topo, overlap_admission=False)
+
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    worker = PrefillWorker(cfg, params, device=dev, link=C.ICI_LINK)
+    with pytest.raises(ValueError, match="overlapped fused path"):
+        ContinuousServingEngine(cfg, params, macro_steps=0,
+                                prefill_worker=worker)
+
+    pure = C.Topology(topo.groups[:2], topo.links[:2], kind="pair",
+                      prefill_spoke=1)
+    rt = C.HeteroRuntime(pure, slots=2, max_len=32, macro_steps=4)
+    rt.add_task(cfg.name, cfg, params)
+    rng = np.random.default_rng(0)
+    from repro.serving.engine import ServeRequest
+    reqs = [ServeRequest(uid=i, prompt=rng.integers(
+                0, cfg.vocab_size, (8,)).astype(np.int32), max_new=2,
+                task=cfg.name) for i in range(2)]
+    with pytest.raises(ValueError, match="1 decode group"):
+        rt.serve(reqs, split=0.5, warm=False)
+    rt.serve(reqs, split=0.0, warm=False)  # "keep all local" stays valid
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_groups=st.integers(2, 5), spoke=st.integers(0, 10))
+def test_prefill_spoke_validation(n_groups, spoke):
+    """The star flag accepts exactly the spoke indices; the hub and
+    out-of-range indices are rejected."""
+    dev = object()
+    spokes = [C.NodeGroup(f"s{i}", [dev], C.JETSON_XAVIER)
+              for i in range(n_groups - 1)]
+    hub = C.NodeGroup("hub", [dev], C.JETSON_NANO)
+    if 1 <= spoke < n_groups:
+        topo = C.Topology.star(hub, spokes, C.WIFI_5GHZ, prefill_spoke=spoke)
+        assert topo.prefill_group is topo.groups[spoke]
+        assert len(topo.decode_indices()) == n_groups - 1
+        assert spoke not in topo.decode_indices()
+    else:
+        with pytest.raises(ValueError):
+            C.Topology.star(hub, spokes, C.WIFI_5GHZ, prefill_spoke=spoke)

@@ -59,14 +59,18 @@ def _dataclass_schema(cls) -> dict:
 
 
 def _session_telemetry() -> dict:
-    """One fixed, deterministic pair session covering both groups, the
-    fused overlapped-admission path and the wave loop."""
+    """One fixed, deterministic session covering two decode groups, the
+    fused overlapped-admission path, the wave loop AND the disaggregated
+    prefill spoke (so the PR-5 prefill_route / prefill_offloaded /
+    t_kv_transfer_s / prefill_fallbacks fields are pinned with realistic
+    types)."""
     cfg = reduced(get_config("llama3.2-1b"))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     dev = jax.devices()[0]
-    topo = C.Topology.pair(C.NodeGroup("pri", [dev], C.JETSON_NANO),
-                           C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
-                           C.WIFI_5GHZ)
+    topo = C.Topology.star(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           [C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                            C.NodeGroup("prefill", [dev], C.JETSON_XAVIER)],
+                           C.WIFI_5GHZ, prefill_spoke="prefill")
     rt = C.HeteroRuntime(topo, slots=2, max_len=32, macro_steps=4)
     rt.add_task(cfg.name, cfg, params)
     rng = np.random.default_rng(0)
