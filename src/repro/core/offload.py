@@ -124,6 +124,14 @@ class OffloadReport:
                                   # spliced back from the prefill group
     prefill_fallbacks: int = 0  # prefill-group failures recovered by local
                                 # shadow prefill (streams unchanged)
+    # --- scale-out timing decomposition (PR 6) ----------------------------
+    # Summed ContinuousStats buckets across the wave's engines; on fused
+    # paths decode wall == t_dispatch_s + t_await_s per engine (see
+    # serving/engine.ContinuousStats).
+    t_splice_s: float = 0.0     # fused cross-group cache-splice dispatch wall
+    t_slot_write_s: float = 0.0  # per-slot big-cache write dispatch wall
+    t_dispatch_s: float = 0.0   # fused decode macro-step launch wall
+    t_await_s: float = 0.0      # token-block await wall (device execution)
 
     @property
     def t_parallel(self) -> float:
@@ -360,6 +368,14 @@ class OffloadEngine:
         parts = [out[g] for g in list(range(1, G)) + [0] if out[g] is not None]
         merged = None
         if parts:
+            if len(parts) > 1 and self.jit:
+                # groups may hold DISTINCT devices (emulated multi-host
+                # scale-out) and jit commits each slice to its group, so
+                # collect onto the hub before the concat —
+                # jnp.concatenate cannot mix committed devices
+                hub = groups[0].devices[0]
+                parts = [jax.tree.map(lambda x: jax.device_put(x, hub), p)
+                         for p in parts]
             merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
                                   *parts) if len(parts) > 1 else parts[0]
         return OffloadReport(

@@ -245,19 +245,25 @@ class PrefillRouter:
 
     def __init__(self, link=None, *, payload_bytes: float = 0.0,
                  distance: float = 1.0, ema: float = 0.3,
-                 margin: float = 1.0, probe_every: int = 8):
+                 margin: float = 1.0, probe_every: int = 8,
+                 reprobe_after: int = 2, reprobe_max: int = 32):
         self.link = link
         self.payload_bytes = float(payload_bytes)
         self.distance = float(distance)
         self.ema = float(ema)
         self.margin = float(margin)
         self.probe_every = int(probe_every)
+        self.reprobe_after = int(reprobe_after)   # waves before the first
+                                                  # down-state re-probe
+        self.reprobe_max = int(reprobe_max)       # backoff ceiling (waves)
         self.rate_local: Optional[float] = None    # s per local shadow
         self.rate_remote: Optional[float] = None   # s per remote shadow
         self.rate_transfer: Optional[float] = None  # s per KV block hop
         self.healthy = True
         self._remote_streak = 0    # consecutive remote waves since the
                                    # local rate was last measured
+        self._down_waves = 0       # waves since the last down-state probe
+        self._next_probe = self.reprobe_after
         self.history: List[PrefillRoute] = []
 
     def _ewma(self, old: Optional[float], new: float) -> float:
@@ -301,11 +307,40 @@ class PrefillRouter:
             if payload_bytes > 0.0:
                 self.payload_bytes = payload_bytes / nt
         if fallbacks > 0:
+            if self.healthy:
+                # freshly latched: restart the re-probe backoff clock
+                self._down_waves = 0
+                self._next_probe = self.reprobe_after
             self.healthy = False
 
     def revive(self) -> None:
         """Re-arm a latched-down router (the group came back)."""
         self.healthy = True
+        self._down_waves = 0
+        self._next_probe = self.reprobe_after
+
+    def maybe_revive(self, group_alive: bool) -> bool:
+        """Bounded-backoff auto re-probe off the wave clock.
+
+        ``revive()`` used to be operator-only, so a latched-local router
+        stayed local forever after a transient prefill-group outage.
+        Called once per wave (before ``route()``): while latched down,
+        count waves and probe the group's health every ``reprobe_after``
+        waves, doubling the wait after each failed probe up to
+        ``reprobe_max``; the first probe that finds the group alive
+        revives the router.  Returns True iff it revived this wave.
+        """
+        if self.healthy:
+            return False
+        self._down_waves += 1
+        if self._down_waves < self._next_probe:
+            return False
+        if group_alive:
+            self.revive()
+            return True
+        self._down_waves = 0
+        self._next_probe = min(self._next_probe * 2, self.reprobe_max)
+        return False
 
     def route(self) -> PrefillRoute:
         """Decide this wave's prefill placement from the live prices."""

@@ -440,6 +440,8 @@ class HeteroRuntime:
         total_offloaded = 0
         total_kv_s = 0.0
         total_fallbacks = 0
+        total_buckets = {"t_splice_s": 0.0, "t_slot_write_s": 0.0,
+                         "t_dispatch_s": 0.0, "t_await_s": 0.0}
         done = 0
         t_start = time.perf_counter()
         while done < len(requests):
@@ -451,10 +453,15 @@ class HeteroRuntime:
             if self.prefill_router is not None:
                 # a worker that died outside a counted wave (warmup, or a
                 # direct engine run) must still flip the route to local
-                if not any(spec.prefill_worker is not None
-                           and spec.prefill_worker.healthy
-                           for spec in self.tasks.values()):
+                alive = any(spec.prefill_worker is not None
+                            and spec.prefill_worker.healthy
+                            for spec in self.tasks.values())
+                if not alive:
                     self.prefill_router.healthy = False
+                # bounded-backoff auto re-probe (PR 6): a latched-local
+                # router flips back on its own once a probe wave finds
+                # the prefill group restored — no operator revive()
+                self.prefill_router.maybe_revive(alive)
                 route = self.prefill_router.route()
                 for spec in self.tasks.values():
                     for eng in spec.engines.values():
@@ -483,6 +490,10 @@ class HeteroRuntime:
             kv_s_group = [0.0] * D
             fallback_group = [0] * D
             shadow_group = [0] * D
+            splice_s_group = [0.0] * D
+            slot_write_s_group = [0.0] * D
+            dispatch_s_group = [0.0] * D
+            await_s_group = [0.0] * D
             t0 = time.perf_counter()
             for d, gi in enumerate(decode):
                 grp = self.topology.groups[gi]
@@ -508,6 +519,10 @@ class HeteroRuntime:
                     kv_s_group[d] += st.t_kv_transfer_s
                     fallback_group[d] += st.prefill_fallbacks
                     shadow_group[d] += st.shadow_prefills
+                    splice_s_group[d] += st.t_splice_s
+                    slot_write_s_group[d] += st.t_slot_write_s
+                    dispatch_s_group[d] += st.t_dispatch_s
+                    await_s_group[d] += st.t_await_s
                 t_group[d] = time.perf_counter() - tg0
                 if gi > 0 and share:
                     t_link[d] = float(offload_latency(
@@ -523,6 +538,10 @@ class HeteroRuntime:
                     "prefill_offloaded": offloaded_group[d],
                     "t_kv_transfer_s": kv_s_group[d],
                     "prefill_fallbacks": fallback_group[d],
+                    "t_splice_s": splice_s_group[d],
+                    "t_slot_write_s": slot_write_s_group[d],
+                    "t_dispatch_s": dispatch_s_group[d],
+                    "t_await_s": await_s_group[d],
                     "tasks": {t: len(r) for t, r in by_task.items()}}
             wall = time.perf_counter() - t0
             total_tokens += sum(toks_group)
@@ -534,6 +553,10 @@ class HeteroRuntime:
             total_offloaded += sum(offloaded_group)
             total_kv_s += sum(kv_s_group)
             total_fallbacks += sum(fallback_group)
+            total_buckets["t_splice_s"] += sum(splice_s_group)
+            total_buckets["t_slot_write_s"] += sum(slot_write_s_group)
+            total_buckets["t_dispatch_s"] += sum(dispatch_s_group)
+            total_buckets["t_await_s"] += sum(await_s_group)
 
             rep = OffloadReport(
                 r=sv.r, n_local=counts[0],
@@ -550,7 +573,11 @@ class HeteroRuntime:
                 t_prefill_overlap_s=sum(overlap_s_group),
                 prefill_offloaded=sum(offloaded_group),
                 t_kv_transfer_s=sum(kv_s_group),
-                prefill_fallbacks=sum(fallback_group))
+                prefill_fallbacks=sum(fallback_group),
+                t_splice_s=sum(splice_s_group),
+                t_slot_write_s=sum(slot_write_s_group),
+                t_dispatch_s=sum(dispatch_s_group),
+                t_await_s=sum(await_s_group))
             if split is None and self.controller is not None:
                 self.controller.observe(rep)
             if self.prefill_router is not None:
@@ -616,6 +643,10 @@ class HeteroRuntime:
                 "prefill_offloaded": total_offloaded,
                 "t_kv_transfer_s": total_kv_s,
                 "prefill_fallbacks": total_fallbacks,
+                "t_splice_s": total_buckets["t_splice_s"],
+                "t_slot_write_s": total_buckets["t_slot_write_s"],
+                "t_dispatch_s": total_buckets["t_dispatch_s"],
+                "t_await_s": total_buckets["t_await_s"],
                 "final_split": [round(float(f), 4) for f in (
                     self.controller.fractions
                     if split is None and self.controller is not None

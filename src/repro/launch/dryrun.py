@@ -17,7 +17,6 @@ breakdown parsed from the compiled HLO (for the collective roofline term).
 import argparse
 import dataclasses
 import json
-import re
 import time
 from typing import Any, Dict, Optional, Tuple
 
@@ -33,48 +32,13 @@ from repro.launch.mesh import (batch_axes, data_shardings,
 from repro.models import model as M
 from repro.models.sharding import activation_sharding
 from repro.serving.engine import make_prefill_step, make_serve_step
+# the HLO collective-bytes parser moved to serving/profiling.py (PR 6) so
+# callers that must NOT inherit this module's 512 forced devices — the
+# scale-out harness, tests — can import it; re-exported here for callers
+# of the old location
+from repro.serving.profiling import analyse_compiled, collective_bytes
 from repro.training.optimizer import OptimizerConfig, init_opt_state
 from repro.training.train import make_train_step
-
-BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
-         "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
-         "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
-
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, float]:
-    """Sum result-shape bytes of every collective op in the HLO."""
-    out = {k: 0.0 for k in _COLLECTIVES}
-    for line in hlo_text.splitlines():
-        stripped = line.strip()
-        if "=" not in stripped:
-            continue
-        rhs = stripped.split("=", 1)[1]
-        op = None
-        for c in _COLLECTIVES:
-            # match op invocation like " all-reduce(" or " all-gather-start("
-            if re.search(rf"\s{c}(-start)?\(", rhs):
-                op = c
-                break
-        if op is None:
-            continue
-        lhs_shapes = _SHAPE_RE.findall(stripped.split("=", 1)[0] + "=" +
-                                       rhs.split("(", 1)[0])
-        total = 0
-        for dt, dims in lhs_shapes:
-            if dt not in BYTES:
-                continue
-            n = 1
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-            total += n * BYTES[dt]
-        out[op] += total
-    out["total"] = sum(out[c] for c in _COLLECTIVES)
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -174,16 +138,8 @@ def lower_one(cfg: ModelConfig, shape: InputShape, mesh, *,
 
 
 def analyse(lowered, compiled) -> Dict[str, Any]:
+    out = analyse_compiled(compiled)
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    if isinstance(cost, (list, tuple)):
-        cost = cost[0]
-    coll = collective_bytes(compiled.as_text())
-    out = {
-        "flops": float(cost.get("flops", -1)),
-        "bytes_accessed": float(cost.get("bytes accessed", -1)),
-        "collective_bytes": coll,
-    }
     for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
                  "output_size_in_bytes", "generated_code_size_in_bytes"):
         out[attr] = getattr(mem, attr, None)

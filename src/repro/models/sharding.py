@@ -38,6 +38,20 @@ def active_mesh():
     return _STATE["mesh"]
 
 
+def scaleout_mesh(devices=None, axes: Tuple[str, ...] = ("data", "model")):
+    """Balanced ("data","model") mesh over the local (or given) devices —
+    the emulated multi-host harness's mesh constructor
+    (``benchmarks/scaleout.py`` / ``tests/test_scaleout.py``).  Axis sizes
+    come from the same balanced factorization the OffloadEngine uses for
+    node-group sub-meshes, so 8 devices give (4, 2), 64 give (8, 8)."""
+    from repro.core.offload import mesh_axis_sizes
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if len(axes) == 1:
+        return jax.sharding.Mesh(np.array(devs), axes)
+    shape = mesh_axis_sizes(len(devs), len(axes))
+    return jax.sharding.Mesh(np.array(devs).reshape(shape), axes)
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
     """`jax.shard_map` moved out of jax.experimental over several releases
     and renamed `check_rep` -> `check_vma` on the way; dispatch to whichever

@@ -320,15 +320,24 @@ def write_slot_cache(cfg, big_cache, prefill_cache, slot):
     """Write a B=1 prefill cache into slot `slot` of the big decode cache.
 
     Every cache leaf is laid out [L, B, ...]; the prefill leaf is
-    [L, 1, P, ...] (or [L, 1, ...] for SSM states), so a single
-    dynamic_update_slice at (0, slot, 0, ...) seeds the slot.  Positions
-    beyond the prompt keep stale bytes from the slot's previous occupant —
-    the per-slot length mask in decode attention hides them.
+    [L, 1, P, ...] (or [L, 1, ...] for SSM states), so a single-slot
+    scatter at (0, slot, 0, ...) seeds the slot.  Positions beyond the
+    prompt keep stale bytes from the slot's previous occupant — the
+    per-slot length mask in decode attention hides them.
+
+    The leaf write routes through ``kernels/ops.splice_blocks`` with a
+    one-element slot-id vector: off-mesh this lowers to exactly the old
+    per-leaf ``dynamic_update_slice``; on a sequence-sharded mesh
+    (``models/sharding.seq_shard_layout``) the write stays shard-local
+    like the cross-group splice, instead of GSPMD regathering the whole
+    big cache around a replicated update.
     """
+    from repro.kernels.ops import splice_blocks
+
+    ids = jnp.asarray(slot, jnp.int32).reshape((1,))
+
     def upd(dst, src):
-        start = (jnp.int32(0), jnp.asarray(slot, jnp.int32)) \
-            + (jnp.int32(0),) * (dst.ndim - 2)
-        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+        return splice_blocks(dst, src, ids)
 
     return _merge_cache(cfg, big_cache, prefill_cache, upd)
 
@@ -415,6 +424,25 @@ class ContinuousStats:
                                        # prefill group
     prefill_fallbacks: int = 0         # prefill-group failures recovered by
                                        # falling back to local shadow prefill
+    # --- scale-out timing decomposition (PR 6) -------------------------
+    # Boundary wall is split into buckets so the emulated multi-host
+    # harness (benchmarks/scaleout.py) can see WHERE time goes as the
+    # device count grows.  On the fused paths the invariant
+    #     decode_s == t_dispatch_s + t_await_s
+    # holds exactly (same float additions); all four stay 0.0 on the
+    # per-step macro_steps=0 path.
+    t_splice_s: float = 0.0            # wall dispatching the fused cross-
+                                       # group cache splice (disaggregated
+                                       # boundaries)
+    t_slot_write_s: float = 0.0        # wall dispatching per-slot big-cache
+                                       # writes (local-shadow / boundary
+                                       # admission)
+    t_dispatch_s: float = 0.0          # host wall launching fused decode
+                                       # macro-steps (async dispatch cost —
+                                       # grows with program size, not data)
+    t_await_s: float = 0.0             # wall blocked on the token-block
+                                       # fetch (device execution, incl. any
+                                       # collectives the mesh inserts)
 
 
 @dataclass
@@ -579,8 +607,11 @@ class ContinuousServingEngine:
         B=1 prefills overlap: dispatch ALL prefills + slot writes first
         (JAX async dispatch), then materialize every admitted slot's first
         token in ONE batched device fetch (a per-slot ``int(argmax)`` would
-        sync once per admission)."""
+        sync once per admission).  Returns the wall spent dispatching the
+        per-slot big-cache writes as the last element (the scale-out
+        harness's slot-write bucket)."""
         admitted = []
+        t_write = 0.0
         for slot, s in enumerate(slot_states):
             if not s.busy and pending:
                 req = pending.popleft()
@@ -588,7 +619,9 @@ class ContinuousServingEngine:
                 if req.frontend is not None:
                     batch["frontend"] = jnp.asarray(req.frontend[None])
                 last_logits, pre_cache = self.prefill(self.params, batch)
+                tw0 = time.perf_counter()
                 cache = self._write_slot(cache, pre_cache, slot)
+                t_write += time.perf_counter() - tw0
                 admitted.append((slot, req, last_logits))
         syncs = 0
         if admitted:
@@ -608,7 +641,7 @@ class ContinuousServingEngine:
                 done = done.at[slot].set(
                     req.max_new <= 1
                     or (self.eos_id is not None and first == self.eos_id))
-        return cache, cur_tok, lengths, remaining, done, syncs
+        return cache, cur_tok, lengths, remaining, done, syncs, t_write
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[ServeRequest]
@@ -648,6 +681,7 @@ class ContinuousServingEngine:
         step_no = 0
         busy_acc = 0.0
         t_prefill = t_decode = 0.0
+        t_slot_write = t_dispatch = t_await = 0.0
         host_syncs = 0
         dispatches = 0
         stalls = 0
@@ -661,9 +695,10 @@ class ContinuousServingEngine:
             # --- admit into every free slot --------------------------
             t0 = time.perf_counter()
             live_before = any(s.busy for s in slot_states)
-            cache, cur_tok, lengths, remaining, done, n_sync = \
+            cache, cur_tok, lengths, remaining, done, n_sync, tw = \
                 self._admit_free_slots(pending, slot_states, cache, cur_tok,
                                        lengths, remaining, done, step_no)
+            t_slot_write += tw
             host_syncs += n_sync
             if n_sync and live_before:
                 stalls += 1     # live slots sat idle through this prefill
@@ -708,14 +743,20 @@ class ContinuousServingEngine:
                 continue
 
             # --- one fused macro-step over all slots ------------------
+            # dispatch (async launch) and await (device execution) are
+            # bucketed separately for the scale-out harness; t_decode
+            # stays their exact sum
             t0 = time.perf_counter()
             toks, cache, cur_tok, lengths, remaining, done = \
                 self._get_loop(K)(self.params, cache, cur_tok, lengths,
                                   remaining, done)
+            t1 = time.perf_counter()
             block = np.asarray(toks)      # [K, slots]: the ONE host sync
+            t2 = time.perf_counter()
+            t_dispatch += t1 - t0
+            t_await += t2 - t1
             host_syncs += 1
             dispatches += 1
-            t_decode += time.perf_counter() - t0
 
             steps_used, busy_inc = self._consume_block(
                 block, slot_states, K, step_no)
@@ -724,6 +765,11 @@ class ContinuousServingEngine:
 
         jax.block_until_ready(cache)
         total_tokens = sum(len(o.tokens) for o in outputs)
+        if dispatches:
+            # fused run: t_decode accumulated nothing per-step, so the
+            # bucket-sum invariant decode_s == t_dispatch_s + t_await_s
+            # holds exactly
+            t_decode = t_dispatch + t_await
         wall = t_prefill + t_decode
         stats = ContinuousStats(
             requests=len(outputs), total_tokens=total_tokens,
@@ -733,7 +779,9 @@ class ContinuousServingEngine:
             host_syncs=host_syncs, macro_dispatches=dispatches,
             t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
             else 0.0,
-            admission_stalls=stalls)
+            admission_stalls=stalls,
+            t_slot_write_s=t_slot_write,
+            t_dispatch_s=t_dispatch, t_await_s=t_await)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats
 
@@ -794,6 +842,7 @@ class ContinuousServingEngine:
         busy_acc = 0.0
         t_prefill = t_decode = t_overlap = 0.0
         t_kv_transfer = 0.0
+        t_splice = t_slot_write = t_dispatch = t_await = 0.0
         host_syncs = dispatches = stalls = n_shadow = 0
         n_offloaded = n_fallbacks = 0
 
@@ -914,6 +963,7 @@ class ContinuousServingEngine:
                     axis=-1).astype(jnp.int32)
             first_dev = None
             if newly:
+                tb0 = time.perf_counter()
                 if worker is not None:
                     # disaggregated mode: ONE donated cross-group splice
                     # for all admitted blocks (KV transfers and fallback-
@@ -922,12 +972,14 @@ class ContinuousServingEngine:
                     cache = self._splice_slots(
                         cache, tuple(blocks),
                         jnp.asarray([n[0] for n in newly], jnp.int32))
+                    t_splice += time.perf_counter() - tb0
                 else:
                     # PR-4 local-shadow baseline: per-slot donated writes
                     # (kept byte-for-byte as the A/B arm the benchmark
                     # gates the disaggregated path against)
                     for (slot, _req, _ll), blk in zip(newly, blocks):
                         cache = self._write_slot(cache, blk, slot)
+                    t_slot_write += time.perf_counter() - tb0
                 cur_tok, lengths, remaining, done, first_dev = admit_slots(
                     cur_tok, lengths, remaining, done,
                     jnp.asarray([n[0] for n in newly], jnp.int32),
@@ -952,6 +1004,7 @@ class ContinuousServingEngine:
                 toks, cache, cur_tok, lengths, remaining, done = \
                     self._get_loop(K)(self.params, cache, cur_tok, lengths,
                                       remaining, done)
+            t_dispatch += time.perf_counter() - t0
 
             # --- 3. top up speculative shadow prefills -----------------
             # depth counts only slot-FILLING shadows: singles never
@@ -969,6 +1022,7 @@ class ContinuousServingEngine:
             t_overlap += dt_overlap
 
             # --- 4. the ONE await: token block + piggybacked firsts ----
+            t0a = time.perf_counter()
             block = None
             if toks is not None:
                 block = np.asarray(toks)
@@ -987,7 +1041,7 @@ class ContinuousServingEngine:
                         tokens=np.asarray([int(first)], np.int32),
                         admitted_step=boundary_step,
                         finished_step=boundary_step))
-            t_decode += time.perf_counter() - t0 - dt_overlap
+            t_await += time.perf_counter() - t0a
 
             if block is not None:
                 steps_used, busy_inc = self._consume_block(
@@ -1008,6 +1062,10 @@ class ContinuousServingEngine:
 
         jax.block_until_ready(cache)
         total_tokens = sum(len(o.tokens) for o in outputs)
+        # t_decode is DEFINED as dispatch + await so the bucket-sum
+        # invariant the scale-out tier gates on holds exactly (step 3's
+        # overlap window is excluded, as before)
+        t_decode = t_dispatch + t_await
         wall = t_prefill + t_decode + t_overlap
         stats = ContinuousStats(
             requests=len(outputs), total_tokens=total_tokens,
@@ -1021,6 +1079,8 @@ class ContinuousServingEngine:
             shadow_prefills=n_shadow,
             prefill_offloaded=n_offloaded,
             t_kv_transfer_s=t_kv_transfer,
-            prefill_fallbacks=n_fallbacks)
+            prefill_fallbacks=n_fallbacks,
+            t_splice_s=t_splice, t_slot_write_s=t_slot_write,
+            t_dispatch_s=t_dispatch, t_await_s=t_await)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats

@@ -101,6 +101,16 @@ class PrefillWorker:
         """Simulate losing the prefill group (node crash / partition)."""
         self.healthy = False
 
+    def restore(self) -> None:
+        """Simulate the prefill group coming back (node rebooted,
+        partition healed).  Clears any armed fault and the call counters
+        so the revived group starts clean — the router's bounded-backoff
+        re-probe (``PrefillRouter.maybe_revive``) picks it up from the
+        wave clock without operator action."""
+        self.healthy = True
+        self._fault = None
+        self._calls = {"dispatch": 0, "fetch": 0}
+
     def inject_fault(self, kind: str = "dispatch", *, after: int = 0,
                      timeout: bool = False) -> None:
         """Arm a one-shot fault: the (``after``+1)-th ``kind`` call kills

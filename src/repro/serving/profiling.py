@@ -1,0 +1,143 @@
+"""Scale-out cost profiling for the continuous serving engine.
+
+Two layers, both allocation-free:
+
+* ``collective_bytes`` — the compiled-HLO parser that sums
+  all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute result bytes.  It used to live in
+  ``launch/dryrun.py``, which force-sets 512 emulated host devices in
+  its first statement and is therefore unimportable from tests, the
+  engine, or the scale-out harness; it lives here now (dryrun imports it
+  back) so callers can count collective traffic on whatever device
+  topology *they* set up.
+
+* ``profile_engine_programs`` — AOT-lowers and compiles the engine's
+  hot-path programs (fused decode macro-step, cross-group splice,
+  per-slot write, B=1 prefill) against ``ShapeDtypeStruct`` stand-ins
+  and returns flops / bytes-accessed / collective-bytes per dispatch.
+  The emulated multi-host tier (``benchmarks/scaleout.py``,
+  ``tests/test_scaleout.py``) gates scaling shape on these numbers —
+  e.g. splice collective bytes must grow sub-linearly in device count.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+         "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+         "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        op = None
+        for c in _COLLECTIVES:
+            # match op invocation like " all-reduce(" or " all-gather-start("
+            if re.search(rf"\s{c}(-start)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        lhs_shapes = _SHAPE_RE.findall(stripped.split("=", 1)[0] + "=" +
+                                       rhs.split("(", 1)[0])
+        total = 0
+        for dt, dims in lhs_shapes:
+            if dt not in BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * BYTES[dt]
+        out[op] += total
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def analyse_compiled(compiled) -> Dict[str, Any]:
+    """flops / bytes-accessed / collective-bytes of one compiled program."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost = dict(cost) if cost else {}
+    return {
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes": collective_bytes(compiled.as_text()),
+    }
+
+
+def profile_engine_programs(engine, *, prompt_len: int,
+                            n_blocks: int = 2) -> Dict[str, Any]:
+    """Per-dispatch cost decomposition of a continuous engine's hot path.
+
+    AOT-lowers and compiles the engine's jitted programs with abstract
+    inputs (``jax.eval_shape`` / ``ShapeDtypeStruct`` — nothing is
+    allocated or executed), then reads each program's cost analysis and
+    collective-bytes breakdown.  Programs:
+
+    * ``decode_loop`` — one fused ``macro_steps``-token decode dispatch
+      (the per-macro-step device cost, collectives included);
+    * ``splice``      — the fused cross-group splice of ``n_blocks``
+      B=1 KV blocks (disaggregated boundary);
+    * ``slot_write``  — one per-slot big-cache write (local boundary);
+    * ``prefill``     — one B=1 shadow prefill.
+
+    The caller is responsible for entering the mesh context the engine
+    serves under (``with mesh, activation_sharding(mesh)``) so each
+    program compiles exactly as the engine would compile it there.
+    """
+    from repro.models import model as M
+
+    cfg = engine.cfg
+    K = max(engine.macro_steps, 1)
+    slots, max_len = engine.slots, engine.max_len
+    params_abs = jax.eval_shape(
+        lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    cache_abs = jax.eval_shape(
+        lambda: M.init_cache(cfg, slots, max_len, dtype=cfg.jnp_dtype))
+    vec = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    done_abs = jax.ShapeDtypeStruct((slots,), jnp.bool_)
+
+    batch_abs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)}
+    if cfg.family in ("vlm", "audio"):
+        batch_abs["frontend"] = jax.ShapeDtypeStruct(
+            (1, cfg.frontend_tokens, cfg.frontend_dim), cfg.jnp_dtype)
+    _, pre_cache_abs = jax.eval_shape(engine.prefill, params_abs, batch_abs)
+
+    m_blocks = max(1, min(n_blocks, slots))
+    ids_abs = jax.ShapeDtypeStruct((m_blocks,), jnp.int32)
+
+    programs = {
+        "decode_loop": engine._get_loop(K).lower(
+            params_abs, cache_abs, vec, vec, vec, done_abs),
+        "splice": engine._splice_slots.lower(
+            cache_abs, (pre_cache_abs,) * m_blocks, ids_abs),
+        "slot_write": engine._write_slot.lower(
+            cache_abs, pre_cache_abs, jax.ShapeDtypeStruct((), jnp.int32)),
+        "prefill": engine.prefill.lower(params_abs, batch_abs),
+    }
+    return {
+        "device_count": jax.device_count(),
+        "macro_steps": K,
+        "slots": slots,
+        "n_blocks": m_blocks,
+        "prompt_len": prompt_len,
+        "programs": {name: analyse_compiled(low.compile())
+                     for name, low in programs.items()},
+    }

@@ -200,3 +200,56 @@ def test_killed_worker_raises_for_direct_callers(served):
         w.dispatch({"tokens": np.ones((1, PROMPT), np.int32)})
     with pytest.raises(PrefillWorkerError):
         w.fetch(np.zeros((1, 4), np.float32))
+
+
+def test_router_auto_reprobe_revives_restored_group(served):
+    """PR-6 recovery path: the group dies mid-session and the router
+    latches local; after the operator restores the WORKER (node reboot),
+    the router's bounded-backoff re-probe flips the route back to remote
+    off the wave clock — no ``revive()`` call anywhere — and the token
+    streams stay bit-identical throughout."""
+    from repro.core.scheduler import PrefillRouter
+    cfg, params, reqs, *_ = served
+    dev = jax.devices()[0]
+    star = C.Topology.star(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           [C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                            C.NodeGroup("pf", [dev], C.JETSON_XAVIER)],
+                           C.ICI_LINK, prefill_spoke="pf")
+    treqs = [ServeRequest(uid=r.uid, prompt=r.prompt, max_new=r.max_new,
+                          task=cfg.name) for r in reqs]
+    plain = C.HeteroRuntime(
+        C.Topology.pair(star.groups[0], star.groups[1], C.WIFI_5GHZ),
+        slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    plain.add_task(cfg.name, cfg, params)
+    want = {o.uid: o.tokens
+            for o in plain.serve(treqs, split=0.5).outputs[cfg.name]}
+
+    # margin pushes the priced decision deterministically to remote once
+    # healthy (both rates are same-order on a shared CI device)
+    router = PrefillRouter(star.prefill_link, reprobe_after=2, reprobe_max=4,
+                           margin=1e9)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         prefill_router=router)
+    spec = rt.add_task(cfg.name, cfg, params)
+    spec.prefill_worker.inject_fault("dispatch", after=2)
+
+    res1 = rt.serve(treqs, split=0.5, warm=False)
+    routes1 = [w["prefill_route"] for w in res1.telemetry["waves"]]
+    assert routes1[0] == "remote" and routes1[-1] == "local", routes1
+    assert not rt.prefill_router.healthy
+    assert res1.telemetry["totals"]["prefill_fallbacks"] >= 1
+
+    spec.prefill_worker.restore()        # node reboots; nobody touches
+    assert spec.prefill_worker.healthy   # the ROUTER
+
+    res2 = rt.serve(treqs, split=0.5, warm=False)
+    routes2 = [w["prefill_route"] for w in res2.telemetry["waves"]]
+    assert rt.prefill_router.healthy, routes2      # auto-revived
+    assert routes2[-1] == "remote", routes2        # probe flipped it back
+    assert res2.telemetry["totals"]["prefill_fallbacks"] == 0
+    assert res2.telemetry["totals"]["prefill_offloaded"] > 0
+    for res in (res1, res2):
+        got = {o.uid: o.tokens for o in res.outputs[cfg.name]}
+        assert set(got) == set(want)
+        for uid in want:
+            np.testing.assert_array_equal(want[uid], got[uid])

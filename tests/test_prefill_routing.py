@@ -260,3 +260,38 @@ def test_prefill_spoke_validation(n_groups, spoke):
     else:
         with pytest.raises(ValueError):
             C.Topology.star(hub, spokes, C.WIFI_5GHZ, prefill_spoke=spoke)
+
+
+def test_reprobe_backoff_is_bounded_and_revives():
+    """maybe_revive (PR 6): while the group stays dead, probe waves come
+    at doubling intervals capped by reprobe_max; the first probe that
+    finds the group alive revives the router with no operator revive()."""
+    r = PrefillRouter(C.ICI_LINK, reprobe_after=2, reprobe_max=8)
+    r.observe(fallbacks=1)
+    assert not r.healthy
+    probes = []
+    for wave in range(1, 31):
+        assert not r.maybe_revive(group_alive=False)
+        if r._down_waves == 0:          # a probe fired (and failed)
+            probes.append(wave)
+    assert probes[0] == 2
+    gaps = [b - a for a, b in zip(probes, probes[1:])]
+    assert gaps == [4, 8, 8, 8], (probes, gaps)  # 2 -> 4 -> 8, capped at 8
+    assert not r.healthy
+    # group restored: the next due probe revives within reprobe_max waves
+    waves_until_revive = 0
+    for _ in range(8):
+        waves_until_revive += 1
+        if r.maybe_revive(group_alive=True):
+            break
+    assert r.healthy and waves_until_revive == 8
+    # revival resets the backoff clock to the fast first interval
+    assert r._next_probe == 2
+
+
+def test_maybe_revive_noop_while_healthy():
+    """A healthy router never consumes backoff state from the wave clock."""
+    r = PrefillRouter(C.ICI_LINK, reprobe_after=1)
+    for _ in range(5):
+        assert not r.maybe_revive(group_alive=True)
+    assert r.healthy and r._down_waves == 0

@@ -1,0 +1,144 @@
+"""Scale-out tier: the emulated multi-host serving path at 8 devices.
+
+Subprocess-isolated like tests/test_distributed_paths.py (jax locks the
+device count at first init, and conftest forbids forcing it in the main
+test session).  The child runs the full PR-6 measurement surface at 8
+forced host devices on the balanced ("data","model") mesh:
+
+* the sharded continuous engine (disaggregated prefill + cross-group
+  splice) must emit the single-device per-step token stream BIT-exactly;
+* the new ``ContinuousStats`` timing buckets must decompose the decode
+  wall exactly (``decode_s == t_dispatch_s + t_await_s``) with the
+  splice wall landing in ``t_splice_s`` (not ``t_slot_write_s``) on the
+  disaggregated path — and vice versa on the local path;
+* the AOT cost-analysis hook (``serving/profiling``) must return
+  per-program collective-bytes records, with the shard-local splice
+  contributing ZERO collective bytes (it must not regather the cache).
+
+Marked ``slow``: runs in the chaos/scale CI job, not the fast tier.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses, json
+    import jax, numpy as np
+    import repro.core as C
+    from repro.configs.base import get_config, reduced
+    from repro.models import model as M
+    from repro.models.sharding import activation_sharding, scaleout_mesh
+    from repro.serving.engine import ContinuousServingEngine, ServeRequest
+    from repro.serving.prefill import PrefillWorker
+    from repro.serving.profiling import profile_engine_programs
+
+    out = {"device_count": jax.device_count()}
+    cfg = dataclasses.replace(
+        reduced(get_config("llama3.2-1b")), num_kv_heads=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, cfg.vocab_size, (5, 8)).astype(np.int32)
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=m)
+            for i, m in enumerate([1, 5, 3, 7, 4])]
+
+    ref_eng = ContinuousServingEngine(cfg, params, slots=2, max_len=32,
+                                      macro_steps=0)
+    ref, _ = ref_eng.run(reqs)
+
+    mesh = scaleout_mesh()
+    out["mesh"] = {k: int(v) for k, v in mesh.shape.items()}
+    with mesh, activation_sharding(mesh):
+        w = PrefillWorker(cfg, params, device=jax.devices()[0],
+                          link=C.ICI_LINK)
+        eng = ContinuousServingEngine(cfg, params, slots=2, max_len=32,
+                                      macro_steps=4, prefill_worker=w)
+        outs, st = eng.run(reqs)
+        out["disagg"] = {
+            "match": int(all(np.array_equal(a.tokens, b.tokens)
+                             for a, b in zip(ref, outs))),
+            "stalls": int(st.admission_stalls),
+            "offloaded": int(st.prefill_offloaded),
+            "decode_s": st.decode_s, "t_dispatch_s": st.t_dispatch_s,
+            "t_await_s": st.t_await_s, "t_splice_s": st.t_splice_s,
+            "t_slot_write_s": st.t_slot_write_s,
+        }
+        out["profile"] = profile_engine_programs(eng, prompt_len=8,
+                                                 n_blocks=2)
+
+        # local-shadow arm: same mesh, no prefill group — the boundary
+        # wall must land in the slot-write bucket instead
+        leng = ContinuousServingEngine(cfg, params, slots=2, max_len=32,
+                                       macro_steps=4, share_from=eng)
+        louts, lst = leng.run(reqs)
+        out["local"] = {
+            "match": int(all(np.array_equal(a.tokens, b.tokens)
+                             for a, b in zip(ref, louts))),
+            "decode_s": lst.decode_s, "t_dispatch_s": lst.t_dispatch_s,
+            "t_await_s": lst.t_await_s, "t_splice_s": lst.t_splice_s,
+            "t_slot_write_s": lst.t_slot_write_s,
+        }
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def results():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_emulation_honored(results):
+    assert results["device_count"] == 8
+    assert results["mesh"] == {"data": 4, "model": 2}
+
+
+def test_bit_identity_at_8_devices(results):
+    """Sharded disaggregated streams == single-device per-step streams,
+    with every prefill offloaded and no stalls."""
+    assert results["disagg"]["match"] == 1, results["disagg"]
+    assert results["local"]["match"] == 1, results["local"]
+    assert results["disagg"]["stalls"] == 0
+    assert results["disagg"]["offloaded"] == 5
+
+
+def test_buckets_sum_to_decode_wall(results):
+    """The PR-6 decomposition is exact by construction on both arms:
+    decode_s == t_dispatch_s + t_await_s (no float slack allowed)."""
+    for arm in ("disagg", "local"):
+        e = results[arm]
+        assert e["decode_s"] == e["t_dispatch_s"] + e["t_await_s"], e
+
+
+def test_boundary_wall_lands_in_the_right_bucket(results):
+    """Disaggregated boundaries splice (t_splice_s), local boundaries
+    write per slot (t_slot_write_s) — never both."""
+    d, l = results["disagg"], results["local"]
+    assert d["t_splice_s"] > 0.0 and d["t_slot_write_s"] == 0.0, d
+    assert l["t_slot_write_s"] > 0.0 and l["t_splice_s"] == 0.0, l
+
+
+def test_profiling_hook_counts_collectives(results):
+    """The AOT hook returns per-program cost + collective-bytes records;
+    the shard-local splice must move ZERO collective bytes."""
+    prof = results["profile"]
+    assert prof["device_count"] == 8
+    progs = prof["programs"]
+    assert set(progs) == {"decode_loop", "splice", "slot_write", "prefill"}
+    for rec in progs.values():
+        assert set(rec) >= {"flops", "bytes_accessed", "collective_bytes"}
+        assert "total" in rec["collective_bytes"]
+    assert progs["splice"]["collective_bytes"]["total"] == 0.0, progs
+    assert progs["slot_write"]["collective_bytes"]["total"] == 0.0, progs

@@ -1,0 +1,111 @@
+"""Static lint over .github/workflows/*.yml (fast tier, pyyaml only).
+
+actionlint runs in the CI lint job (pinned docker://rhysd/actionlint),
+but it is not installed in the dev container — this test catches the
+same high-frequency workflow mistakes locally before a push:
+
+* every job declares ``runs-on`` AND ``timeout-minutes`` (a job without
+  a timeout can wedge a runner for 6 hours on a hung subprocess);
+* every ``needs:`` edge names a job that exists;
+* every ``${{ matrix.X }}`` reference resolves to a key actually
+  produced by that job's ``strategy.matrix`` (direct keys or
+  ``include`` entries);
+* a top-level ``concurrency`` group with ``cancel-in-progress`` is
+  present, so superseded PR runs are cancelled;
+* every step has exactly one of ``run`` / ``uses``.
+
+PyYAML quirk: YAML 1.1 parses the bare ``on:`` trigger key as boolean
+``True``, so the trigger block is looked up under both spellings.
+"""
+import pathlib
+import re
+
+import pytest
+import yaml
+
+WORKFLOW_DIR = pathlib.Path(__file__).resolve().parents[1] / ".github" / "workflows"
+WORKFLOWS = sorted(WORKFLOW_DIR.glob("*.yml")) + sorted(WORKFLOW_DIR.glob("*.yaml"))
+
+_MATRIX_REF = re.compile(r"\$\{\{\s*matrix\.([A-Za-z_][A-Za-z0-9_-]*)")
+
+
+def _load(path):
+    with open(path) as fh:
+        doc = yaml.safe_load(fh)
+    assert isinstance(doc, dict), f"{path.name}: not a mapping"
+    return doc
+
+
+def _matrix_keys(job):
+    """All matrix keys a job's steps may reference."""
+    matrix = (job.get("strategy") or {}).get("matrix") or {}
+    keys = {k for k in matrix if k not in ("include", "exclude")}
+    for entry in matrix.get("include") or []:
+        keys |= set(entry)
+    return keys
+
+
+@pytest.fixture(params=WORKFLOWS, ids=lambda p: p.name)
+def workflow(request):
+    return request.param, _load(request.param)
+
+
+def test_workflow_dir_is_not_empty():
+    assert WORKFLOWS, f"no workflow files under {WORKFLOW_DIR}"
+
+
+def test_has_trigger_block(workflow):
+    path, doc = workflow
+    trigger = doc.get("on", doc.get(True))  # YAML 1.1: on -> True
+    assert trigger, f"{path.name}: missing `on:` trigger block"
+
+
+def test_concurrency_cancels_superseded_runs(workflow):
+    path, doc = workflow
+    conc = doc.get("concurrency")
+    assert isinstance(conc, dict), f"{path.name}: missing top-level concurrency"
+    assert conc.get("group"), f"{path.name}: concurrency.group missing"
+    assert "cancel-in-progress" in conc, (
+        f"{path.name}: concurrency.cancel-in-progress missing"
+    )
+
+
+def test_every_job_has_runner_and_timeout(workflow):
+    path, doc = workflow
+    for name, job in doc["jobs"].items():
+        assert job.get("runs-on"), f"{path.name}:{name}: missing runs-on"
+        assert isinstance(job.get("timeout-minutes"), int), (
+            f"{path.name}:{name}: missing timeout-minutes"
+        )
+
+
+def test_needs_edges_resolve(workflow):
+    path, doc = workflow
+    jobs = doc["jobs"]
+    for name, job in jobs.items():
+        needs = job.get("needs") or []
+        if isinstance(needs, str):
+            needs = [needs]
+        for dep in needs:
+            assert dep in jobs, f"{path.name}:{name}: needs unknown job {dep!r}"
+
+
+def test_matrix_references_resolve(workflow):
+    path, doc = workflow
+    for name, job in doc["jobs"].items():
+        keys = _matrix_keys(job)
+        for ref in _MATRIX_REF.findall(yaml.safe_dump(job)):
+            assert ref in keys, (
+                f"{path.name}:{name}: ${{{{ matrix.{ref} }}}} has no matching "
+                f"strategy.matrix key (have {sorted(keys)})"
+            )
+
+
+def test_steps_have_exactly_one_action(workflow):
+    path, doc = workflow
+    for name, job in doc["jobs"].items():
+        for i, step in enumerate(job.get("steps") or []):
+            has_run, has_uses = "run" in step, "uses" in step
+            assert has_run != has_uses, (
+                f"{path.name}:{name} step {i}: needs exactly one of run/uses"
+            )
