@@ -124,6 +124,18 @@ class OffloadReport:
                                   # spliced back from the prefill group
     prefill_fallbacks: int = 0  # prefill-group failures recovered by local
                                 # shadow prefill (streams unchanged)
+    # --- prefix-cache / compressed-hop accounting (PR 7) ------------------
+    prefix_hits: int = 0        # admissions that matched the radix trie
+                                # (full + partial; full hits skip prefill
+                                # AND the KV hop entirely)
+    prefix_blocks_reused: int = 0  # trie blocks spliced into resumed
+                                   # prefills instead of recomputed
+    prefill_flops_avoided: float = 0.0  # analytic prefill FLOPs skipped
+    prefill_flops_total: float = 0.0    # ...of this analytic total
+    kv_hop_bytes_raw: float = 0.0   # uncompacted block bytes of fetched
+                                    # prefill→decode hops
+    kv_hop_bytes_wire: float = 0.0  # bytes that actually crossed (tail
+                                    # rows, sender-compacted)
     # --- scale-out timing decomposition (PR 6) ----------------------------
     # Summed ContinuousStats buckets across the wave's engines; on fused
     # paths decode wall == t_dispatch_s + t_await_s per engine (see

@@ -259,6 +259,13 @@ class PrefillRouter:
         self.rate_local: Optional[float] = None    # s per local shadow
         self.rate_remote: Optional[float] = None   # s per remote shadow
         self.rate_transfer: Optional[float] = None  # s per KV block hop
+        # fraction of prefill work that SURVIVES the prefix cache (1.0 =
+        # no cache / no hits).  Scales the analytic hop fallback: a
+        # cached span never crosses the wire, so un-measured hops must
+        # be priced on the residual tail, not the full block.  The
+        # measured ``rate_transfer`` EWMA needs no scaling — it is built
+        # from hops that were already compacted.
+        self.prefix_residual = 1.0
         self.healthy = True
         self._remote_streak = 0    # consecutive remote waves since the
                                    # local rate was last measured
@@ -277,13 +284,15 @@ class PrefillRouter:
         if self.link is None or self.payload_bytes <= 0.0:
             return 0.0
         from repro.core.network import offload_latency
-        return float(offload_latency(self.link, self.payload_bytes,
-                                     self.distance))
+        return float(offload_latency(
+            self.link, self.payload_bytes * self.prefix_residual,
+            self.distance))
 
     def observe(self, *, local_s: float = 0.0, n_local: int = 0,
                 remote_s: float = 0.0, n_remote: int = 0,
                 transfer_s: float = 0.0, n_transfers: Optional[int] = None,
-                payload_bytes: float = 0.0, fallbacks: int = 0) -> None:
+                payload_bytes: float = 0.0, fallbacks: int = 0,
+                prefix_residual: Optional[float] = None) -> None:
         """Fold one wave's measured prefill timings into the EWMAs.
 
         ``local_s``/``remote_s`` are the wave's shadow-dispatch walls
@@ -293,8 +302,15 @@ class PrefillRouter:
         mixing counts deflates one rate and biases the comparison.
         ``transfer_s`` is the wave's priced KV hops over ``n_transfers``
         transferred blocks (defaults to ``n_remote``; pass it when the
-        wave also transferred inline-dispatched blocks).  Any reported
-        fallback marks the prefill group down."""
+        wave also transferred inline-dispatched blocks).
+        ``prefix_residual`` is the wave's surviving-prefill fraction
+        (``1 − flops_avoided/flops_total``) — EWMA-folded so the hop
+        fallback prices residual tails.  Any reported fallback marks the
+        prefill group down."""
+        if prefix_residual is not None:
+            self.prefix_residual = self._ewma(
+                None if self.prefix_residual == 1.0 else self.prefix_residual,
+                max(0.0, min(1.0, float(prefix_residual))))
         if n_local > 0:
             self.rate_local = self._ewma(self.rate_local, local_s / n_local)
         if n_remote > 0:

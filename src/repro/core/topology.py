@@ -204,8 +204,12 @@ class TaskSpec:
     payload_bytes_per_item: float
     max_new: Optional[int]        # per-task generation cap (None = only
                                   # each request's own max_new applies)
-    prefill_worker: Any = None    # PrefillWorker on the dedicated prefill
-                                  # group (None without a prefill_spoke)
+    prefill_worker: Any = None    # PrefillWorker / PrefillWorkerPool on the
+                                  # dedicated prefill group (None without a
+                                  # prefill_spoke)
+    prefix_cache: Any = None      # PrefixCache shared by every decode
+                                  # engine of this task (hub-side trie;
+                                  # None when the cache is disabled)
 
 
 @dataclass
@@ -250,7 +254,10 @@ class HeteroRuntime:
                  overlap_admission: bool = True,
                  controller: Optional[SplitRatioController] = None,
                  prefill_router: Optional[PrefillRouter] = None,
-                 link_distance: float = 1.0):
+                 link_distance: float = 1.0,
+                 prefix_cache_blocks: int = 0, prefix_block_size: int = 8,
+                 prefill_pool: int = 1,
+                 kv_keep_rate: Optional[float] = None):
         self.topology = topology
         self.slots = slots
         self.max_len = max_len
@@ -260,6 +267,19 @@ class HeteroRuntime:
         # shadow-slot speculative prefill behind the fused decode loop
         # (ignored on the macro_steps=0 per-token path)
         self.link_distance = link_distance
+        # content-aware KV reuse (PR 7): >0 arms a per-task radix prefix
+        # cache of that many fixed-size KV blocks, shared hub-side by
+        # every decode engine of the task — matched spans skip prefill
+        # and (disaggregated) the KV hop ships compacted tails only
+        self.prefix_cache_blocks = int(prefix_cache_blocks)
+        self.prefix_block_size = int(prefix_block_size)
+        # >1 puts a PrefillWorkerPool (content-hash affinity + failover)
+        # on the prefill spoke instead of a single serializing worker
+        self.prefill_pool = int(prefill_pool)
+        if self.prefill_pool < 1:
+            raise ValueError(f"prefill_pool must be >= 1, got {prefill_pool}")
+        # gated LOSSY hop knob — None (default) keeps hops lossless
+        self.kv_keep_rate = kv_keep_rate
         # decode waves are split over every group EXCEPT the dedicated
         # prefill spoke (when one is marked) — that group serves KV blocks
         self._decode = topology.decode_indices()
@@ -308,11 +328,32 @@ class HeteroRuntime:
         worker = None
         pg = self.topology.prefill_group
         if pg is not None:
-            from repro.serving.prefill import PrefillWorker
-            worker = PrefillWorker(cfg, params, device=pg.devices[0],
-                                   link=self.topology.prefill_link,
-                                   distance=self.link_distance,
-                                   name=pg.name)
+            from repro.serving.prefill import (PrefillWorker,
+                                               PrefillWorkerPool)
+            if self.prefill_pool > 1:
+                worker = PrefillWorkerPool(cfg, params,
+                                           size=self.prefill_pool,
+                                           device=pg.devices[0],
+                                           link=self.topology.prefill_link,
+                                           distance=self.link_distance,
+                                           name=pg.name,
+                                           kv_keep_rate=self.kv_keep_rate)
+            else:
+                worker = PrefillWorker(cfg, params, device=pg.devices[0],
+                                       link=self.topology.prefill_link,
+                                       distance=self.link_distance,
+                                       name=pg.name,
+                                       kv_keep_rate=self.kv_keep_rate)
+        pcache = None
+        if self.prefix_cache_blocks > 0:
+            from repro.serving.prefix_cache import PrefixCache
+            # ONE trie per task, shared by every decode engine: the trie
+            # lives hub-side with the admission loop, so a prefix served
+            # on any group seeds hits for the whole session — and with a
+            # prefill spoke it is consulted BEFORE dispatch, so full
+            # hits never cross the wire at all
+            pcache = PrefixCache(cfg, block_size=self.prefix_block_size,
+                                 budget_blocks=self.prefix_cache_blocks)
         engines: Dict[str, ContinuousServingEngine] = {}
         first: Optional[ContinuousServingEngine] = None
         overlap = self.overlap_admission
@@ -323,6 +364,7 @@ class HeteroRuntime:
                                           macro_steps=self.macro_steps,
                                           overlap_admission=overlap,
                                           prefill_worker=worker,
+                                          prefix_cache=pcache,
                                           share_from=first)
             engines[grp.name] = eng
             first = first or eng
@@ -331,7 +373,7 @@ class HeteroRuntime:
             payload = float(getattr(cfg, "d_model", 256)) * 2.0 * 16
         spec = TaskSpec(name=name, cfg=cfg, params=params, engines=engines,
                         payload_bytes_per_item=payload, max_new=max_new,
-                        prefill_worker=worker)
+                        prefill_worker=worker, prefix_cache=pcache)
         self.tasks[name] = spec
         return spec
 
@@ -440,6 +482,12 @@ class HeteroRuntime:
         total_offloaded = 0
         total_kv_s = 0.0
         total_fallbacks = 0
+        total_prefix_hits = 0
+        total_prefix_blocks = 0
+        total_flops_avoided = 0.0
+        total_flops = 0.0
+        total_kv_raw = 0.0
+        total_kv_wire = 0.0
         total_buckets = {"t_splice_s": 0.0, "t_slot_write_s": 0.0,
                          "t_dispatch_s": 0.0, "t_await_s": 0.0}
         done = 0
@@ -490,6 +538,12 @@ class HeteroRuntime:
             kv_s_group = [0.0] * D
             fallback_group = [0] * D
             shadow_group = [0] * D
+            hits_group = [0] * D
+            pblocks_group = [0] * D
+            favoid_group = [0.0] * D
+            ftotal_group = [0.0] * D
+            kv_raw_group = [0.0] * D
+            kv_wire_group = [0.0] * D
             splice_s_group = [0.0] * D
             slot_write_s_group = [0.0] * D
             dispatch_s_group = [0.0] * D
@@ -519,6 +573,12 @@ class HeteroRuntime:
                     kv_s_group[d] += st.t_kv_transfer_s
                     fallback_group[d] += st.prefill_fallbacks
                     shadow_group[d] += st.shadow_prefills
+                    hits_group[d] += st.prefix_hits
+                    pblocks_group[d] += st.prefix_blocks_reused
+                    favoid_group[d] += st.prefill_flops_avoided
+                    ftotal_group[d] += st.prefill_flops_total
+                    kv_raw_group[d] += st.kv_hop_bytes_raw
+                    kv_wire_group[d] += st.kv_hop_bytes_wire
                     splice_s_group[d] += st.t_splice_s
                     slot_write_s_group[d] += st.t_slot_write_s
                     dispatch_s_group[d] += st.t_dispatch_s
@@ -538,6 +598,11 @@ class HeteroRuntime:
                     "prefill_offloaded": offloaded_group[d],
                     "t_kv_transfer_s": kv_s_group[d],
                     "prefill_fallbacks": fallback_group[d],
+                    "prefix_hits": hits_group[d],
+                    "prefix_blocks_reused": pblocks_group[d],
+                    "prefill_flops_avoided": favoid_group[d],
+                    "kv_hop_bytes_raw": kv_raw_group[d],
+                    "kv_hop_bytes_wire": kv_wire_group[d],
                     "t_splice_s": splice_s_group[d],
                     "t_slot_write_s": slot_write_s_group[d],
                     "t_dispatch_s": dispatch_s_group[d],
@@ -553,6 +618,12 @@ class HeteroRuntime:
             total_offloaded += sum(offloaded_group)
             total_kv_s += sum(kv_s_group)
             total_fallbacks += sum(fallback_group)
+            total_prefix_hits += sum(hits_group)
+            total_prefix_blocks += sum(pblocks_group)
+            total_flops_avoided += sum(favoid_group)
+            total_flops += sum(ftotal_group)
+            total_kv_raw += sum(kv_raw_group)
+            total_kv_wire += sum(kv_wire_group)
             total_buckets["t_splice_s"] += sum(splice_s_group)
             total_buckets["t_slot_write_s"] += sum(slot_write_s_group)
             total_buckets["t_dispatch_s"] += sum(dispatch_s_group)
@@ -574,6 +645,12 @@ class HeteroRuntime:
                 prefill_offloaded=sum(offloaded_group),
                 t_kv_transfer_s=sum(kv_s_group),
                 prefill_fallbacks=sum(fallback_group),
+                prefix_hits=sum(hits_group),
+                prefix_blocks_reused=sum(pblocks_group),
+                prefill_flops_avoided=sum(favoid_group),
+                prefill_flops_total=sum(ftotal_group),
+                kv_hop_bytes_raw=sum(kv_raw_group),
+                kv_hop_bytes_wire=sum(kv_wire_group),
                 t_splice_s=sum(splice_s_group),
                 t_slot_write_s=sum(slot_write_s_group),
                 t_dispatch_s=sum(dispatch_s_group),
@@ -590,12 +667,18 @@ class HeteroRuntime:
                 # (prefill_offloaded, inline offloads included).
                 n_off = sum(offloaded_group)
                 n_topup = sum(shadow_group)
+                wave_ftotal = sum(ftotal_group)
                 self.prefill_router.observe(
                     local_s=sum(overlap_s_group) if n_off == 0 else 0.0,
                     n_local=n_topup if n_off == 0 else 0,
                     remote_s=sum(overlap_s_group) if n_off else 0.0,
                     n_remote=n_topup if n_off else 0,
                     transfer_s=sum(kv_s_group), n_transfers=n_off,
+                    # price hops on WIRE bytes — what the link carried —
+                    # and the residual prefill fraction the cache left
+                    payload_bytes=sum(kv_wire_group),
+                    prefix_residual=(1.0 - sum(favoid_group) / wave_ftotal)
+                    if wave_ftotal > 0 else None,
                     fallbacks=sum(fallback_group))
             waves_tel.append({
                 "wave": len(waves_tel), "n": len(chunk),
@@ -609,6 +692,11 @@ class HeteroRuntime:
                 "prefill_offloaded": sum(offloaded_group),
                 "t_kv_transfer_s": sum(kv_s_group),
                 "prefill_fallbacks": sum(fallback_group),
+                "prefix_hits": sum(hits_group),
+                "prefix_blocks_reused": sum(pblocks_group),
+                "prefill_flops_avoided": sum(favoid_group),
+                "kv_hop_bytes_raw": sum(kv_raw_group),
+                "kv_hop_bytes_wire": sum(kv_wire_group),
                 "per_group": per_group})
             if verbose:
                 counts_str = "/".join(str(c) for c in counts)
@@ -643,6 +731,14 @@ class HeteroRuntime:
                 "prefill_offloaded": total_offloaded,
                 "t_kv_transfer_s": total_kv_s,
                 "prefill_fallbacks": total_fallbacks,
+                "prefix_hits": total_prefix_hits,
+                "prefix_blocks_reused": total_prefix_blocks,
+                "prefill_flops_avoided": total_flops_avoided,
+                "prefill_flops_total": total_flops,
+                "prefill_flops_avoided_frac": total_flops_avoided
+                / total_flops if total_flops else 0.0,
+                "kv_hop_bytes_raw": total_kv_raw,
+                "kv_hop_bytes_wire": total_kv_wire,
                 "t_splice_s": total_buckets["t_splice_s"],
                 "t_slot_write_s": total_buckets["t_slot_write_s"],
                 "t_dispatch_s": total_buckets["t_dispatch_s"],

@@ -107,7 +107,10 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                      slots: int, split: str, macro_steps: int = 8,
                      overlap_admission: bool = True,
                      topology: Optional[C.Topology] = None,
-                     link=None, telemetry_path: Optional[str] = None
+                     link=None, telemetry_path: Optional[str] = None,
+                     prefix_cache_blocks: int = 0,
+                     prefix_block_size: int = 8, prefill_pool: int = 1,
+                     kv_keep_rate: Optional[float] = None
                      ) -> C.ServeResult:
     """Continuous-batching collaborative serving over a request stream,
     through the HeteroRuntime session (pair or star topology).
@@ -126,7 +129,11 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
     max_len = prompt_len + offset + max_new + 8
     runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len,
                               macro_steps=macro_steps,
-                              overlap_admission=overlap_admission)
+                              overlap_admission=overlap_admission,
+                              prefix_cache_blocks=prefix_cache_blocks,
+                              prefix_block_size=prefix_block_size,
+                              prefill_pool=prefill_pool,
+                              kv_keep_rate=kv_keep_rate)
     runtime.add_task(cfg.name, cfg, params,
                      max_new=max_new,
                      payload_bytes_per_item=prompt_len * cfg.d_model * 2)
@@ -157,6 +164,13 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
               f"{tot['prefill_offloaded']} offloaded, "
               f"{tot['t_kv_transfer_s'] * 1e3:.2f}ms kv-transfer, "
               f"{tot['prefill_fallbacks']} fallbacks")
+    if prefix_cache_blocks > 0:
+        print(f"prefix cache[{prefix_cache_blocks}x{prefix_block_size}]: "
+              f"{tot['prefix_hits']} hits, "
+              f"{tot['prefix_blocks_reused']} blocks reused, "
+              f"{tot['prefill_flops_avoided_frac']:.1%} prefill flops "
+              f"avoided, kv hop {tot['kv_hop_bytes_raw'] / 1e3:.0f}kB raw "
+              f"-> {tot['kv_hop_bytes_wire'] / 1e3:.0f}kB wire")
     if telemetry_path:
         with open(telemetry_path, "w") as fh:
             fh.write(result.to_json(indent=2))
@@ -197,6 +211,22 @@ def main():
                          "disaggregated prefill: shadow prefills ship "
                          "there and KV blocks splice back over its link "
                          "(continuous mode; requires --macro-steps > 0)")
+    ap.add_argument("--prefix-cache-blocks", type=int, default=0,
+                    metavar="N",
+                    help="arm the cross-request radix prefix cache with a "
+                         "budget of N KV blocks per task (0 = disabled; "
+                         "continuous mode)")
+    ap.add_argument("--prefix-block-size", type=int, default=8,
+                    metavar="T", help="prefix-cache block size in tokens")
+    ap.add_argument("--prefill-pool", type=int, default=1, metavar="W",
+                    help="prefill workers on the dedicated prefill group "
+                         "(>1 = content-hash affinity pool with failover; "
+                         "requires --prefill-group)")
+    ap.add_argument("--kv-keep-rate", type=float, default=None,
+                    metavar="R",
+                    help="LOSSY prefill->decode KV-hop compression: keep "
+                         "only the top-R salience fraction of shipped tail "
+                         "rows (default off = lossless compaction)")
     ap.add_argument("--telemetry-json", default=None, metavar="PATH",
                     help="write HeteroRuntime telemetry JSON here")
     args = ap.parse_args()
@@ -215,6 +245,12 @@ def main():
     if args.prefill_group is not None and not args.continuous:
         ap.error("--prefill-group requires --continuous (disaggregated "
                  "prefill rides the continuous overlapped-admission path)")
+    if args.prefix_cache_blocks and not args.continuous:
+        ap.error("--prefix-cache-blocks requires --continuous (the radix "
+                 "cache lives in the slot runtime's admission loop)")
+    if args.prefill_pool > 1 and args.prefill_group is None:
+        ap.error("--prefill-pool > 1 requires --prefill-group (the pool "
+                 "lives on the dedicated prefill spoke)")
     topology = build_topology(args.topology, nodes,
                               prefill_group=args.prefill_group)
     P = args.prompt_len
@@ -228,7 +264,11 @@ def main():
                          split=args.split, macro_steps=args.macro_steps,
                          overlap_admission=args.overlap_admission,
                          topology=topology,
-                         telemetry_path=args.telemetry_json)
+                         telemetry_path=args.telemetry_json,
+                         prefix_cache_blocks=args.prefix_cache_blocks,
+                         prefix_block_size=args.prefix_block_size,
+                         prefill_pool=args.prefill_pool,
+                         kv_keep_rate=args.kv_keep_rate)
         return
 
     prompts = np.stack([np.pad(r.prompt[:P], (0, max(0, P - len(r.prompt))))

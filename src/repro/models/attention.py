@@ -257,11 +257,18 @@ def cache_update(cache, new, index):
 
 def attn_apply(params, x, cfg, *, positions, mode: str,
                kv_x=None, kv_positions=None, causal: bool = True,
-               cache=None, cache_index=None, use_pallas: bool = False):
+               cache=None, cache_index=None, use_pallas: bool = False,
+               prefix_kv=None):
     """Unified attention entry.
 
     mode "full":   self/cross attention over x (train & prefill).
                    returns (out, (k, v))  — k/v for cache seeding.
+                   ``prefix_kv=(k_pre, v_pre)`` resumes a prefill from
+                   cached post-RoPE K/V covering positions [0, q): x holds
+                   only the TAIL rows (``positions`` are their global
+                   indices), queries attend over prefix+tail keys, and the
+                   returned k/v are the full-length concatenation — so the
+                   seeded cache is laid out exactly like a cold prefill's.
     mode "decode": x is [B,1,D]; cache = {"k","v"} [B,S,Hkv,dh];
                    cache_index = scalar position of the new token.
                    returns (out, new_cache).
@@ -272,6 +279,12 @@ def attn_apply(params, x, cfg, *, positions, mode: str,
         src = kv_x if cross else x
         src_pos = kv_positions if cross else positions
         q, k, v = _qkv(params, x, src, cfg, positions, src_pos, rope=rope)
+        if prefix_kv is not None:
+            assert not cross, "prefix resume is self-attention only"
+            pk, pv = prefix_kv
+            k = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+            v = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+            src_pos = jnp.arange(k.shape[1])
         out = chunked_attention(
             q, k, v, causal=causal and not cross,
             window=cfg.sliding_window if not cross else 0,

@@ -148,7 +148,20 @@ def forward(params, cfg, batch, *, mode: str = "train", remat: bool = False,
         enc_out = enc_pos = None
         if kind == "decoder_x":
             enc_out, enc_pos = _encode(params, cfg, batch)
-        if kind == "hybrid":
+        prefix = batch.get("prefix") if mode == "prefill" else None
+        if prefix is not None:
+            # Resume prefill: ``prefix`` is an L-stacked cache pytree
+            # ({"self": {"k": [L,B,q,Hkv,dh], ...}}) of post-RoPE K/V for
+            # rows [0, q). Only the tail rows run through the stack; the
+            # returned caches are full-length (cold-prefill layout).
+            assert kind == "dense", "prefix resume only supports dense stacks"
+            q_rows = prefix["self"]["k"].shape[2]
+            x, positions = x[:, q_rows:], positions[q_rows:]
+            x, caches, aux = tfm.stack_apply(
+                params["blocks"], x, cfg, kind=kind, mode="resume",
+                positions=positions, caches=prefix,
+                remat=remat, use_pallas=use_pallas)
+        elif kind == "hybrid":
             x, caches, aux = tfm.hybrid_apply(
                 params["blocks"], x, cfg, mode=mode, positions=positions,
                 remat=remat, use_pallas=use_pallas)

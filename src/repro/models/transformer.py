@@ -60,6 +60,7 @@ def block_apply(params, x, cfg, *, kind: str, mode: str, positions,
                 causal: bool = True, use_pallas: bool = False):
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
+        assert mode != "resume", "SSM states fold the whole prefix; resume is attention-only"
         h = norm_apply(params["ln1"], x, cfg)
         y, new_state = ssm_mod.mamba_apply(
             params["mamba"], h, cfg,
@@ -73,8 +74,12 @@ def block_apply(params, x, cfg, *, kind: str, mode: str, positions,
                                     mode="decode", cache=cache["self"],
                                     cache_index=cache_index, use_pallas=use_pallas)
     else:
+        # mode "resume": x holds only the tail rows; cache["self"] holds the
+        # cached prefix K/V whose rows the tail attends over. The returned
+        # cache is the full-length concatenation (cold-prefill layout).
+        prefix = (cache["self"]["k"], cache["self"]["v"]) if mode == "resume" else None
         y, kv = attn.attn_apply(params["attn"], h, cfg, positions=positions,
-                                mode="full", causal=causal)
+                                mode="full", causal=causal, prefix_kv=prefix)
         new_kv = {"k": kv[0], "v": kv[1]}
     x = x + y
 

@@ -443,6 +443,20 @@ class ContinuousStats:
     t_await_s: float = 0.0             # wall blocked on the token-block
                                        # fetch (device execution, incl. any
                                        # collectives the mesh inserts)
+    # --- content-aware KV reuse (PR 7: serving/prefix_cache.py) --------
+    prefix_hits: int = 0               # requests that reused >= 1 cached
+                                       # prefix block (full hits included)
+    prefix_blocks_reused: int = 0      # cached KV blocks reused across
+                                       # all admitted requests
+    prefill_flops_avoided: float = 0.0 # analytic prefill FLOPs skipped by
+                                       # resuming from cached prefixes
+    prefill_flops_total: float = 0.0   # analytic prefill FLOPs the run
+                                       # would cost with no cache (the
+                                       # denominator of the avoided ratio)
+    kv_hop_bytes_raw: float = 0.0      # prefill→decode KV-transfer bytes
+                                       # before sender-side compaction
+    kv_hop_bytes_wire: float = 0.0     # ... and what actually crossed the
+                                       # link (tail-only, masked-compact)
 
 
 @dataclass
@@ -454,6 +468,10 @@ class _Shadow:
                                        # single-token requests (logits-only)
     remote: bool = False               # lives on the dedicated prefill
                                        # group until fetched
+    hit: Any = None                    # PrefixHit backing a resumed remote
+                                       # prefill: carries the hub-resident
+                                       # prefix for the compacted fetch and
+                                       # the pins released after it
 
 
 @dataclass
@@ -504,6 +522,7 @@ class ContinuousServingEngine:
                  macro_steps: int = 8,
                  overlap_admission: bool = True,
                  prefill_worker: Optional[Any] = None,
+                 prefix_cache: Optional[Any] = None,
                  share_from: Optional["ContinuousServingEngine"] = None):
         """`share_from`: another engine over the SAME cfg whose jitted
         prefill/step/slot-write/decode-loop programs this one reuses —
@@ -518,8 +537,18 @@ class ContinuousServingEngine:
         prefill group instead of the decode group and their KV blocks
         spliced back at macro boundaries (disaggregated prefill); if the
         worker dies or ``prefill_remote`` is False the engine falls back
-        to PR-4 local shadow prefill with bit-identical token streams."""
+        to PR-4 local shadow prefill with bit-identical token streams.
+
+        ``prefix_cache``: a :class:`repro.serving.prefix_cache.PrefixCache`
+        shared by every engine of the task (hub-side).  Every admission
+        path consults it before prefilling: exact full-prompt hits skip
+        prefill (and, disaggregated, the KV hop) entirely; partial hits
+        resume prefill from the matched block span; misses prefill cold.
+        All finished prefills are re-indexed.  Token streams stay
+        bit-identical — exact-match radix reuse returns the same bytes a
+        cold prefill would compute."""
         self.cfg, self.params = cfg, params
+        self.prefix_cache = prefix_cache
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.macro_steps = int(macro_steps)
         self.overlap_admission = bool(overlap_admission)
@@ -570,6 +599,41 @@ class ContinuousServingEngine:
                              self._use_pallas)
 
     # ------------------------------------------------------------------
+    def _make_batch(self, req: ServeRequest):
+        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        if req.frontend is not None:
+            batch["frontend"] = jnp.asarray(req.frontend[None])
+        return batch
+
+    def _account_hit(self, hit) -> None:
+        """Fold one PrefixHit (hit or miss) into the run's counters."""
+        if hit.hit:
+            self._pc_hits += 1
+            self._pc_blocks += hit.blocks
+        self._pc_flops_avoided += hit.flops_avoided
+        self._pc_flops_total += hit.flops_total
+
+    def _prefill_via_cache(self, req: ServeRequest):
+        """B=1 LOCAL prefill through the prefix cache: consult the trie,
+        serve an exact full-prompt hit without touching the device,
+        resume from a partial hit (``batch["prefix"]``), and re-index
+        whatever was prefilled before the caller consumes it."""
+        pc = self.prefix_cache
+        batch = self._make_batch(req)
+        if pc is None:
+            return self.prefill(self.params, batch)
+        hit = pc.match(req.prompt, frontend=req.frontend)
+        self._account_hit(hit)
+        if hit.full is not None:
+            return hit.full
+        if hit.prefix is not None:
+            batch = dict(batch, prefix=hit.prefix)
+        logits, cache = self.prefill(self.params, batch)
+        pc.insert(req.prompt, logits, cache, frontend=req.frontend)
+        pc.release(hit)
+        return logits, cache
+
+    # ------------------------------------------------------------------
     def _consume_block(self, block, slot_states, K: int,
                        step_no: int) -> Tuple[int, float]:
         """Host bookkeeping for one fetched ``[K, slots]`` token block,
@@ -615,10 +679,7 @@ class ContinuousServingEngine:
         for slot, s in enumerate(slot_states):
             if not s.busy and pending:
                 req = pending.popleft()
-                batch = {"tokens": jnp.asarray(req.prompt[None])}
-                if req.frontend is not None:
-                    batch["frontend"] = jnp.asarray(req.frontend[None])
-                last_logits, pre_cache = self.prefill(self.params, batch)
+                last_logits, pre_cache = self._prefill_via_cache(req)
                 tw0 = time.perf_counter()
                 cache = self._write_slot(cache, pre_cache, slot)
                 t_write += time.perf_counter() - tw0
@@ -655,6 +716,11 @@ class ContinuousServingEngine:
         assert all(r.max_new >= 1 for r in requests)
         assert P + self._offset + max(r.max_new for r in requests) \
             <= self.max_len, "max_len too small for prompt + generation"
+        # per-run prefix-cache / KV-hop accounting (the PrefixCache object
+        # is shared across engines and runs; these are THIS run's deltas)
+        self._pc_hits = self._pc_blocks = 0
+        self._pc_flops_avoided = self._pc_flops_total = 0.0
+        self._kv_raw = self._kv_wire = 0.0
         if self.macro_steps > 0 and self.overlap_admission:
             return self._run_overlapped(requests)
         return self._run_boundary(requests)
@@ -781,7 +847,13 @@ class ContinuousServingEngine:
             else 0.0,
             admission_stalls=stalls,
             t_slot_write_s=t_slot_write,
-            t_dispatch_s=t_dispatch, t_await_s=t_await)
+            t_dispatch_s=t_dispatch, t_await_s=t_await,
+            prefix_hits=self._pc_hits,
+            prefix_blocks_reused=self._pc_blocks,
+            prefill_flops_avoided=self._pc_flops_avoided,
+            prefill_flops_total=self._pc_flops_total,
+            kv_hop_bytes_raw=self._kv_raw,
+            kv_hop_bytes_wire=self._kv_wire)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats
 
@@ -854,16 +926,28 @@ class ContinuousServingEngine:
             return (worker is not None and self.prefill_remote
                     and worker.healthy)
 
-        def _prefill_batch(req: ServeRequest):
-            batch = {"tokens": jnp.asarray(req.prompt[None])}
-            if req.frontend is not None:
-                batch["frontend"] = jnp.asarray(req.frontend[None])
-            return batch
-
         def _dispatch_shadow():
             nonlocal n_offloaded, n_fallbacks
             req = pending.popleft()
-            batch = _prefill_batch(req)
+            pc = self.prefix_cache
+            hit = None
+            if pc is not None:
+                hit = pc.match(req.prompt, frontend=req.frontend)
+                self._account_hit(hit)
+                if hit.full is not None:
+                    # exact full-prompt hit: no prefill anywhere and —
+                    # disaggregated — no KV hop either; the assembled
+                    # blocks are already hub-resident fresh copies
+                    logits, cache = hit.full
+                    shadows.append(_Shadow(
+                        req, logits,
+                        None if req.max_new <= 1 else cache))
+                    return
+            batch = self._make_batch(req)
+            if hit is not None and hit.prefix is not None:
+                # partial hit: prefill resumes from the cached span —
+                # local and remote dispatch alike run only the tail rows
+                batch = dict(batch, prefix=hit.prefix)
             # a single-token request never touches a slot: park only its
             # logits, so speculative singles cost no cache memory
             if _use_remote():
@@ -872,34 +956,61 @@ class ContinuousServingEngine:
                     shadows.append(_Shadow(
                         req, last_logits,
                         None if req.max_new <= 1 else pre_cache,
-                        remote=True))
+                        remote=True, hit=hit))
                     n_offloaded += 1
                     return
                 except _worker_error():
                     n_fallbacks += 1    # group died: this and every later
                                         # shadow prefills locally
             last_logits, pre_cache = self.prefill(self.params, batch)
+            if pc is not None:
+                pc.insert(req.prompt, last_logits, pre_cache,
+                          frontend=req.frontend)
+                pc.release(hit)
             shadows.append(_Shadow(req, last_logits,
                                    None if req.max_new <= 1 else pre_cache))
 
         def _localize(sh: _Shadow) -> Tuple[_Shadow, int]:
             """Bring a shadow's block onto the decode group: the KV
             transfer hop for remote shadows (priced via the worker's
-            LinkModel), a no-op for local ones.  A fetch failure (group
-            died after dispatch — possibly after earlier blocks were
-            already admitted) re-prefills locally; the redo is EXPOSED
-            prefill, so the caller counts it like a shadow miss."""
+            LinkModel), a no-op for local ones.  A resumed remote prefill
+            ships only its compacted tail over the hop (the hub already
+            holds the prefix rows — ``prefix=`` below); raw and wire
+            bytes both fold into the run's counters.  A fetch failure
+            (group died after dispatch — possibly after earlier blocks
+            were already admitted) re-prefills locally; the redo is
+            EXPOSED prefill, so the caller counts it like a shadow
+            miss."""
             nonlocal t_kv_transfer, n_fallbacks
             if not sh.remote:
                 return sh, 0
+            pc = self.prefix_cache
+            prefix = sh.hit.prefix if sh.hit is not None else None
             try:
-                logits, blk, t_hop = worker.fetch(sh.logits, sh.cache)
+                logits, blk, t_hop = worker.fetch(sh.logits, sh.cache,
+                                                  prefix=prefix)
                 t_kv_transfer += t_hop
+                raw, wire = worker.last_fetch_bytes
+                self._kv_raw += raw
+                self._kv_wire += wire
+                if pc is not None:
+                    if blk is not None:
+                        pc.insert(sh.req.prompt, logits, blk,
+                                  frontend=sh.req.frontend)
+                    pc.release(sh.hit)
                 return _Shadow(sh.req, logits, blk), 0
             except _worker_error():
                 n_fallbacks += 1
-                logits, pre = self.prefill(self.params,
-                                           _prefill_batch(sh.req))
+                batch = self._make_batch(sh.req)
+                if prefix is not None:
+                    # the hit's arrays outlive any eviction (plain
+                    # references) — the local redo still resumes
+                    batch = dict(batch, prefix=prefix)
+                logits, pre = self.prefill(self.params, batch)
+                if pc is not None:
+                    pc.insert(sh.req.prompt, logits, pre,
+                              frontend=sh.req.frontend)
+                    pc.release(sh.hit)
                 return _Shadow(sh.req, logits,
                                None if sh.req.max_new <= 1 else pre), 1
 
@@ -1081,6 +1192,12 @@ class ContinuousServingEngine:
             t_kv_transfer_s=t_kv_transfer,
             prefill_fallbacks=n_fallbacks,
             t_splice_s=t_splice, t_slot_write_s=t_slot_write,
-            t_dispatch_s=t_dispatch, t_await_s=t_await)
+            t_dispatch_s=t_dispatch, t_await_s=t_await,
+            prefix_hits=self._pc_hits,
+            prefix_blocks_reused=self._pc_blocks,
+            prefill_flops_avoided=self._pc_flops_avoided,
+            prefill_flops_total=self._pc_flops_total,
+            kv_hop_bytes_raw=self._kv_raw,
+            kv_hop_bytes_wire=self._kv_wire)
         outputs.sort(key=lambda o: o.uid)
         return outputs, stats

@@ -1,0 +1,496 @@
+"""Cross-request radix prefix cache + compressed KV hops (paper §VI).
+
+The paper's core data-reduction idea — mask frames and identify similar
+frames *before* offloading — translated to LLM serving: redundancy
+elimination across requests.  Shared prompt prefixes (system prompts,
+few-shot templates — the dominant traffic shape at fleet scale) prefill
+once; later requests reuse the cached KV and prefill only their tail.
+
+Two cooperating pieces live here:
+
+**PrefixCache** — a radix (token-trie) cache over fixed-size KV *blocks*:
+
+* Dense-attention families store one trie node per ``block_size`` tokens;
+  the node payload is the post-RoPE K/V rows of that block sliced from a
+  finished B=1 prefill cache (``[L, 1, T, Hkv, dh]`` leaves).  Because
+  chunked prefill attention masks future positions with exact ``-inf``,
+  row *i* of every K/V buffer is bitwise independent of tokens after *i*
+  — so a block cached from one request is byte-identical to what any
+  other request sharing that prefix would have computed.  That is the
+  repo's bit-identity contract, and it is what makes *exact-match* radix
+  caching safe: same tokens ⇒ same KV, no approximation knob involved.
+* A matched request resumes prefill from the block-aligned span
+  (``mode="resume"`` through ``models/model.forward``): only the tail
+  rows run through the stack, the returned cache is full-length, and the
+  engine's splice path is unchanged.  An exact full-prompt match (all
+  blocks + the terminal remainder node) skips prefill entirely — and on
+  the disaggregated path skips the KV-transfer hop too.
+* Copy-on-write discipline: node payloads are IMMUTABLE.  A divergent
+  continuation creates sibling nodes — shared blocks are never mutated
+  in place — and the private copy materializes at the engine's slot
+  splice (every byte handed to the donated splice/write programs is a
+  fresh array: ``insert`` slices copies *before* the engine consumes the
+  prefill cache, ``match`` assembles hits out of fresh concatenations).
+  The trie therefore never holds a reference to a donated buffer.
+* Reference counting + LRU eviction: a partial hit pins its matched
+  nodes until the request's prefill has been dispatched and re-inserted
+  (``release``); eviction removes only *childless, unpinned* nodes,
+  least-recently-used first, until the configured block budget holds.
+* Recurrent/mixture families (ssm / hybrid / moe / audio) fold the whole
+  prefix into their states, so mid-sequence resume is not meaningful —
+  they get exact full-prompt terminal caching only (still bitwise, still
+  refcounted under the same budget).
+
+**KV-hop compaction** (``compact_kv_hop`` / ``restore_kv_hop``) — the
+prefill→decode transfer compression for disaggregated prefill, built on
+the §VI machinery (``kernels/masked_compact.py`` + ``core/masking.py``):
+the sender ships only the tail rows the receiver does not already hold,
+packed to the buffer front by the Pallas masked-compact kernel; wire
+bytes are the compacted payload + int32 row indices
+(``masking.compression_report`` accounting).  The default keep-all mask
+is lossless — kept rows pack in submission order, so the restore is an
+exact inverse.  ``keep_rate < 1`` additionally drops low-salience tail
+rows (K-norm scores, the paper's detector stand-in); that knob is lossy,
+gated, and OFF by default.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+# ---------------------------------------------------------------------------
+# Analytic prefill-FLOPs accounting (what the cache saves)
+# ---------------------------------------------------------------------------
+def prefill_flops(cfg, rows: int, cached: int = 0) -> float:
+    """Analytic FLOPs to prefill ``rows`` total rows when the first
+    ``cached`` rows' K/V are already resident: 2·N_active per tail row for
+    the parameter matmuls plus the causal-attention quadratic term
+    (4·L·H·dh·Σ keys per query row) for the tail rows only."""
+    n_active = M.count_params_analytic(cfg, active_only=True)
+    lin = 2.0 * n_active * (rows - cached)
+
+    def tri(n: int) -> float:
+        return n * (n + 1) / 2.0
+
+    quad = 4.0 * cfg.num_layers * (cfg.num_heads or 0) * cfg.head_dim \
+        * (tri(rows) - tri(cached))
+    return lin + quad
+
+
+# ---------------------------------------------------------------------------
+# Trie nodes
+# ---------------------------------------------------------------------------
+class _Node:
+    """One radix node.  ``kv`` is the immutable block payload (a prefill
+    cache tree sliced to this block's rows) or None for payload-less
+    roots; terminals additionally carry the last-token ``logits``."""
+    __slots__ = ("key", "kv", "logits", "children", "refs", "tick", "parent")
+
+    def __init__(self, key, kv=None, logits=None, parent=None):
+        self.key = key
+        self.kv = kv
+        self.logits = logits
+        self.children: Dict[Any, "_Node"] = {}
+        self.refs = 0
+        self.tick = 0
+        self.parent = parent
+
+
+@dataclass
+class PrefixHit:
+    """Result of one trie lookup (always returned — misses included, so
+    the caller's FLOPs accounting sees every request)."""
+    q_rows: int = 0                    # cache rows covered by the match
+    rows_total: int = 0                # full prefill rows for this request
+    blocks: int = 0                    # payload nodes reused
+    prefix: Any = None                 # L-stacked KV tree [L,1,q,...] or None
+    full: Any = None                   # (logits, cache) for exact full hits
+    pins: Tuple[_Node, ...] = ()       # nodes pinned until release()
+    flops_avoided: float = 0.0
+    flops_total: float = 0.0
+
+    @property
+    def hit(self) -> bool:
+        return self.q_rows > 0
+
+
+def _digest(frontend) -> Optional[str]:
+    if frontend is None:
+        return None
+    arr = np.asarray(frontend)
+    return hashlib.blake2b(arr.tobytes(), digest_size=8).hexdigest()
+
+
+def _concat_blocks(parts):
+    """Assemble node payloads into one contiguous tree along the position
+    axis.  Always produces FRESH arrays (concat, or an explicit device
+    copy for a single part) — hits are handed to donated splice programs,
+    and the trie must never share a buffer with them."""
+    if len(parts) == 1:
+        return jax.tree.map(lambda a: a.copy(), parts[0])
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=2), *parts)
+
+
+class PrefixCache:
+    """Hub-side cross-request radix prefix cache (one per served task;
+    shared by every decode-group engine and consulted before every
+    prefill dispatch, local or remote — which keeps it coherent across a
+    ``PrefillWorkerPool``)."""
+
+    def __init__(self, cfg, *, block_size: int = 8,
+                 budget_blocks: int = 512):
+        assert block_size >= 1 and budget_blocks >= 1
+        self.cfg = cfg
+        self.block_size = int(block_size)
+        self.budget_blocks = int(budget_blocks)
+        self.kind = M._kind(cfg)
+        self._offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
+        self._roots: Dict[Any, _Node] = {}
+        self._payload_nodes: list = []   # every node holding kv/logits
+        self._tick = 0
+        # counters (the engine folds per-request numbers from PrefixHit
+        # into ContinuousStats; these are the cache's own lifetime view)
+        self.hits = 0
+        self.full_hits = 0
+        self.misses = 0
+        self.blocks_reused = 0
+        self.flops_avoided = 0.0
+        self.flops_total = 0.0
+        self.inserts = 0
+        self.evictions = 0
+
+    # -- bookkeeping ----------------------------------------------------
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self._payload_nodes)
+
+    def _evict(self) -> None:
+        """LRU-evict childless, unpinned payload nodes until the budget
+        holds.  Pinned or interior nodes are never evicted (evicting an
+        interior node would orphan its subtree's row span); the budget
+        may transiently overflow when everything over it is pinned."""
+        while len(self._payload_nodes) > self.budget_blocks:
+            victims = [n for n in self._payload_nodes
+                       if not n.children and n.refs == 0]
+            if not victims:
+                return
+            victim = min(victims, key=lambda n: n.tick)
+            if victim.parent is not None:
+                victim.parent.children.pop(victim.key, None)
+            else:   # a root (exact-match store / childless vlm prologue)
+                self._roots = {k: v for k, v in self._roots.items()
+                               if v is not victim}
+            self._payload_nodes.remove(victim)
+            self.evictions += 1
+
+    def release(self, hit: Optional[PrefixHit]) -> None:
+        """Unpin a partial hit's matched nodes (call after the resumed
+        prefill has been dispatched and its blocks re-inserted)."""
+        if hit is None:
+            return
+        for node in hit.pins:
+            assert node.refs > 0, "release without matching pin"
+            node.refs -= 1
+        hit.pins = ()
+        self._evict()   # pins may have been the only thing over budget
+
+    # -- lookup ---------------------------------------------------------
+    def _root_key(self, n_tokens: int, frontend) -> Any:
+        # keyed by padded prompt length: prefill programs chunk attention
+        # by the padded length, so prefixes only transfer between
+        # same-shape requests (and by the frontend digest for vlm — the
+        # prologue rows depend on the image, not just the tokens)
+        return (n_tokens, _digest(frontend))
+
+    def match(self, tokens, *, frontend=None) -> PrefixHit:
+        toks = tuple(int(t) for t in np.asarray(tokens).ravel())
+        rows = len(toks) + self._offset
+        total = prefill_flops(self.cfg, rows)
+        self.flops_total += total
+        hit = PrefixHit(rows_total=rows, flops_total=total)
+        root = self._roots.get(self._root_key(len(toks), frontend))
+        if root is None:
+            self.misses += 1
+            return hit
+        if self.kind != "dense":
+            return self._match_exact(root, toks, hit)
+
+        T = self.block_size
+        node, matched = root, []
+        for i in range(len(toks) // T):
+            child = node.children.get(toks[i * T:(i + 1) * T])
+            if child is None:
+                break
+            matched.append(child)
+            node = child
+        term = node.children.get(("end", toks[len(matched) * T:]))
+
+        prologue = [root.kv] if root.kv is not None else []
+        if self._offset and not prologue:
+            # vlm trie without its prologue rows cannot resume (the
+            # prefix span must be contiguous from row 0)
+            self.misses += 1
+            return hit
+        if term is not None:
+            # exact full-prompt hit: assemble the complete cache from the
+            # chain + remainder — prefill AND the KV hop are skipped
+            parts = prologue + [n.kv for n in matched]
+            if term.kv is not None:
+                parts.append(term.kv)
+            for n in [root] + matched + [term]:
+                self._touch(n)
+            hit.q_rows = rows
+            hit.blocks = len(parts)
+            hit.full = (term.logits, _concat_blocks(parts))
+            hit.flops_avoided = total
+            self.hits += 1
+            self.full_hits += 1
+            self.blocks_reused += hit.blocks
+            self.flops_avoided += hit.flops_avoided
+            return hit
+
+        # partial hit: resume needs >= 1 tail row
+        while matched and self._offset + len(matched) * T >= rows:
+            matched.pop()
+        if not matched and not (prologue and self._offset):
+            self.misses += 1
+            return hit
+        parts = prologue + [n.kv for n in matched]
+        pins = tuple([root] + matched) if prologue else tuple(matched)
+        for n in pins:
+            n.refs += 1
+            self._touch(n)
+        hit.q_rows = self._offset + len(matched) * T
+        hit.blocks = len(parts)
+        hit.prefix = _concat_blocks(parts)
+        hit.pins = pins
+        hit.flops_avoided = total - prefill_flops(self.cfg, rows, hit.q_rows)
+        self.hits += 1
+        self.blocks_reused += hit.blocks
+        self.flops_avoided += hit.flops_avoided
+        return hit
+
+    def _match_exact(self, root: _Node, toks, hit: PrefixHit) -> PrefixHit:
+        term = root.children.get(("end", toks))
+        if term is None:
+            self.misses += 1
+            return hit
+        self._touch(term)
+        hit.q_rows = hit.rows_total
+        hit.blocks = 1
+        hit.full = (term.logits,
+                    jax.tree.map(lambda a: a.copy(), term.kv))
+        hit.flops_avoided = hit.flops_total
+        self.hits += 1
+        self.full_hits += 1
+        self.blocks_reused += 1
+        self.flops_avoided += hit.flops_avoided
+        return hit
+
+    # -- insert ---------------------------------------------------------
+    def _add_payload(self, node: _Node) -> None:
+        self._payload_nodes.append(node)
+        self._touch(node)
+
+    def insert(self, tokens, logits, cache, *, frontend=None) -> None:
+        """Index a finished B=1 prefill cache.  Every payload is a FRESH
+        slice/copy taken here, BEFORE the engine splices (and thereby
+        consumes) the prefill cache — the trie never aliases a donated
+        buffer.  Existing nodes are left untouched (payloads are
+        immutable; a reinsert of known content only refreshes recency)."""
+        if cache is None:
+            return
+        toks = tuple(int(t) for t in np.asarray(tokens).ravel())
+        key = self._root_key(len(toks), frontend)
+        self.inserts += 1
+        if self.kind != "dense":
+            root = self._roots.get(key)
+            if root is None:
+                root = self._roots[key] = _Node(key)
+            if ("end", toks) not in root.children:
+                term = _Node(("end", toks),
+                             kv=jax.tree.map(lambda a: a.copy(), cache),
+                             logits=logits, parent=root)
+                root.children[term.key] = term
+                self._add_payload(term)
+            else:
+                self._touch(root.children[("end", toks)])
+            self._evict()
+            return
+
+        T, F = self.block_size, self._offset
+        rows = len(toks) + F
+        assert jax.tree.leaves(cache)[0].shape[2] == rows, \
+            "prefill cache rows must cover frontend prologue + tokens"
+
+        def rows_of(lo, hi):
+            return jax.tree.map(lambda a: a[:, :, lo:hi], cache)
+
+        root = self._roots.get(key)
+        if root is None:
+            root = self._roots[key] = _Node(key)
+        if F and root.kv is None:
+            root.kv = rows_of(0, F)
+            self._add_payload(root)
+        node = root
+        nb = len(toks) // T
+        for i in range(nb):
+            blk = toks[i * T:(i + 1) * T]
+            child = node.children.get(blk)
+            if child is None:
+                child = _Node(blk, kv=rows_of(F + i * T, F + (i + 1) * T),
+                              parent=node)
+                node.children[blk] = child
+                self._add_payload(child)
+            else:
+                self._touch(child)
+            node = child
+        rem = toks[nb * T:]
+        tkey = ("end", rem)
+        if tkey not in node.children:
+            term = _Node(tkey,
+                         kv=rows_of(F + nb * T, rows) if rem else None,
+                         logits=logits, parent=node)
+            node.children[tkey] = term
+            self._add_payload(term)
+        else:
+            self._touch(node.children[tkey])
+        self._evict()
+
+    # -- introspection ---------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits, "full_hits": self.full_hits,
+            "misses": self.misses, "blocks_reused": self.blocks_reused,
+            "flops_avoided": self.flops_avoided,
+            "flops_total": self.flops_total,
+            "inserts": self.inserts, "evictions": self.evictions,
+            "n_blocks": self.n_blocks,
+        }
+
+    def check_invariants(self) -> None:
+        """Structural invariants the property harness drives:
+
+        * every payload node is reachable and registered exactly once;
+        * refcounts are non-negative and match outstanding pins
+          (callers assert the zero-sum themselves after release);
+        * two sibling nodes never share a key (⇒ a block is never shared
+          across divergent token content);
+        * the budget holds unless every node over it is pinned/interior.
+        """
+        seen = set()
+        for root in self._roots.values():
+            stack = [root]
+            while stack:
+                n = stack.pop()
+                assert n.refs >= 0
+                assert id(n) not in seen, "node reachable twice"
+                seen.add(id(n))
+                assert len(set(map(id, n.children.values()))) \
+                    == len(n.children)
+                stack.extend(n.children.values())
+        for n in self._payload_nodes:
+            assert id(n) in seen, "payload node unreachable from any root"
+            assert n.kv is not None or n.logits is not None
+        if len(self._payload_nodes) > self.budget_blocks:
+            # insert() and release() both evict, so between operations an
+            # over-budget cache means nothing was evictable: every
+            # payload node is interior (has children) or pinned
+            assert all(n.children or n.refs > 0
+                       for n in self._payload_nodes), \
+                "over budget with evictable nodes remaining"
+
+
+# ---------------------------------------------------------------------------
+# KV-hop compaction (sender side of the prefill→decode transfer)
+# ---------------------------------------------------------------------------
+def _pad_for_kernel(toks, mask):
+    """Pad [L,S,D] tokens (+[L,S] mask) to the masked-compact kernel's
+    block-divisibility constraints (S and D each a multiple of 128 once
+    they exceed 128).  Padded rows carry mask=False, so they are never
+    kept; padded features are sliced back off at restore."""
+    L, S, D = toks.shape
+    ps = (-S) % 128 if S > 128 else 0
+    pd = (-D) % 128 if D > 128 else 0
+    if ps or pd:
+        toks = jnp.pad(toks, ((0, 0), (0, ps), (0, pd)))
+        mask = jnp.pad(mask, ((0, 0), (0, ps)))
+    return toks, mask
+
+
+def compact_kv_hop(cache, q_rows: int, *, keep_rate: Optional[float] = None):
+    """Sender-side compaction of a full-length resume-prefill cache: only
+    the tail rows ``[q_rows:]`` cross the link (the receiver already holds
+    the prefix), packed front-of-buffer by the Pallas masked-compact
+    kernel.  Returns ``(packed, wire_bytes)``; wire bytes count the
+    compacted payload plus the int32 index map
+    (:func:`repro.core.masking.compression_report`).
+
+    ``keep_rate=None`` (default) is LOSSLESS: the keep-all mask packs
+    every tail row in order and :func:`restore_kv_hop` inverts exactly.
+    ``keep_rate < 1`` drops low-salience tail rows (K-norm scores) — a
+    gated accuracy/bandwidth knob that breaks bit-identity by design.
+    """
+    from repro.core import masking
+    from repro.kernels.ops import masked_compact
+
+    kv = cache["self"]
+    lossy = keep_rate is not None and keep_rate < 1.0
+    sal_mask = None
+    if lossy:
+        ktail = kv["k"][:, 0, q_rows:]
+        L, Rt = ktail.shape[0], ktail.shape[1]
+        scores = masking.norm_scores(ktail.reshape(L, Rt, -1))
+        sal_mask = masking.make_mask(scores, float(keep_rate))
+    packed: Dict[str, Any] = {"lossless": not lossy}
+    wire = 0.0
+    for name in ("k", "v"):
+        leaf = kv[name]
+        L, _, S, Hkv, dh = leaf.shape
+        Rt, D = S - q_rows, Hkv * dh
+        tail = leaf[:, 0, q_rows:].reshape(L, Rt, D)
+        mask = sal_mask if lossy else jnp.ones((L, Rt), bool)
+        cap = max(1, int(round(float(keep_rate) * Rt))) if lossy else Rt
+        toks, m = _pad_for_kernel(tail, mask)
+        out, idx, cnt = masked_compact(toks, m, cap)
+        rep = masking.compression_report(
+            mask, cap, D, bytes_per_el=leaf.dtype.itemsize)
+        wire += rep.bytes_after
+        packed[name] = (out, idx, (L, Rt, Hkv, dh))
+    return packed, float(wire)
+
+
+def restore_kv_hop(packed, prefix):
+    """Receiver-side restore: unpack the compacted tail and concatenate it
+    behind the hub-resident ``prefix`` rows into a full-length prefill
+    cache tree.  Lossless payloads restore bit-exact (kept rows packed in
+    submission order — the unpack is a slice); lossy payloads scatter by
+    the index map and leave dropped rows zero."""
+    kv = {}
+    for name in ("k", "v"):
+        out, idx, (L, Rt, Hkv, dh) = packed[name]
+        D = Hkv * dh
+        if packed["lossless"]:
+            tail = out[:, :Rt, :D]
+        else:
+            valid = idx >= 0
+            src = jnp.where(valid[..., None], out[..., :D], 0)
+            tail = jnp.zeros((L, Rt, D), out.dtype).at[
+                jnp.arange(L)[:, None],
+                jnp.where(valid, idx, 0)].add(src)
+        tail = tail.reshape(L, 1, Rt, Hkv, dh)
+        kv[name] = jnp.concatenate(
+            [prefix["self"][name].astype(tail.dtype), tail], axis=2)
+    return {"self": kv}

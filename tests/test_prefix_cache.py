@@ -1,0 +1,393 @@
+"""Unit + property tests for the cross-request radix prefix cache and the
+compressed prefill→decode KV hop (``serving/prefix_cache.py``), plus the
+direct masked-compact / masking edge cases the hop is built on.
+
+The cache's correctness contract is EXACTNESS: a hit must hand back the
+very bytes a cold prefill of the same tokens would produce.  The tests
+drive that with synthetic caches whose row *i* is a deterministic
+function of ``tokens[:i+1]`` — exactly the dependency structure causal
+prefill has — so any block ever shared across divergent token content
+shows up as a value mismatch, not just a structural bug.  Engine-level
+bit-identity across model families lives in the slow tier
+(``tests/test_prefix_serving.py``)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, reduced
+from repro.core.masking import compression_report, make_mask, norm_scores
+from repro.kernels.ops import masked_compact
+from repro.kernels.ref import masked_compact_ref
+from repro.serving.prefix_cache import (PrefixCache, compact_kv_hop,
+                                        prefill_flops, restore_kv_hop)
+
+from _hypothesis_compat import given, settings, strategies as st
+
+
+@pytest.fixture(scope="module")
+def dense_cfg():
+    return reduced(get_config("llama3.2-1b"))
+
+
+# ---------------------------------------------------------------------------
+# synthetic caches: row i is a function of tokens[:i+1] (causal structure)
+# ---------------------------------------------------------------------------
+L, HKV, DH = 2, 2, 4
+
+
+def synth_cache(toks):
+    """[L,1,S,HKV,DH] leaves; row i encodes cumsum(toks)[i] — any reuse of
+    a block across different prefixes changes the values."""
+    toks = np.asarray(toks, np.float32)
+    pre = np.cumsum(toks)[None, None, :, None, None]
+    grid = (np.arange(L, dtype=np.float32)[:, None, None, None, None] * 1e3
+            + np.arange(HKV, dtype=np.float32)[None, None, None, :, None] * 10
+            + np.arange(DH, dtype=np.float32)[None, None, None, None, :] * .01)
+    k = jnp.asarray(pre + grid)
+    return {"self": {"k": k, "v": k + 0.5}}
+
+
+def synth_logits(toks):
+    return jnp.asarray([float(np.sum(toks))])
+
+
+def trie_nodes(pc):
+    out = []
+    for root in pc._roots.values():
+        stack = [root]
+        while stack:
+            n = stack.pop()
+            out.append(n)
+            stack.extend(n.children.values())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs accounting
+# ---------------------------------------------------------------------------
+def test_prefill_flops_accounting(dense_cfg):
+    full = prefill_flops(dense_cfg, 32)
+    resumed = prefill_flops(dense_cfg, 32, cached=24)
+    assert 0 < resumed < full
+    assert prefill_flops(dense_cfg, 32, cached=32) == 0.0
+    # avoided fraction grows with the cached span
+    fr = [1 - prefill_flops(dense_cfg, 32, cached=c) / full
+          for c in (0, 8, 16, 24)]
+    assert fr == sorted(fr) and fr[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# trie hits are exact
+# ---------------------------------------------------------------------------
+def test_full_hit_returns_exact_bytes(dense_cfg):
+    pc = PrefixCache(dense_cfg, block_size=8, budget_blocks=64)
+    toks = np.arange(1, 21, dtype=np.int32)   # 20 rows: 2 blocks + tail 4
+    cache = synth_cache(toks)
+    pc.insert(toks, synth_logits(toks), cache)
+    hit = pc.match(toks)
+    assert hit.hit and hit.full is not None and hit.q_rows == 20
+    logits, got = hit.full
+    np.testing.assert_array_equal(np.asarray(logits),
+                                  np.asarray(synth_logits(toks)))
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(got["self"][name]),
+                                      np.asarray(cache["self"][name]))
+        # fresh arrays, never the trie's own buffers
+        assert got["self"][name] is not cache["self"][name]
+    assert hit.flops_avoided == hit.flops_total > 0
+    pc.check_invariants()
+
+
+def test_partial_hit_prefix_rows_and_pins(dense_cfg):
+    pc = PrefixCache(dense_cfg, block_size=8, budget_blocks=64)
+    a = np.arange(1, 21, dtype=np.int32)
+    pc.insert(a, synth_logits(a), synth_cache(a))
+    b = a.copy()
+    b[16:] = [99, 98, 97, 96]                  # shares blocks 0..1 only
+    hit = pc.match(b)
+    assert hit.hit and hit.full is None and hit.q_rows == 16
+    assert hit.blocks == 2
+    # the handed-back prefix is exactly what a cold prefill of b computes
+    # for rows [0,16) — identical to a's rows because the tokens agree
+    want = synth_cache(b)
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(hit.prefix["self"][name]),
+            np.asarray(want["self"][name][:, :, :16]))
+    assert len(hit.pins) == 2
+    assert all(n.refs == 1 for n in hit.pins)
+    pc.check_invariants()
+    pc.release(hit)
+    assert all(n.refs == 0 for n in trie_nodes(pc))
+    assert hit.pins == ()
+    pc.release(hit)          # idempotent: a double release is a no-op
+    pc.check_invariants()
+
+
+def test_divergent_tokens_never_share_blocks(dense_cfg):
+    pc = PrefixCache(dense_cfg, block_size=4, budget_blocks=64)
+    a = np.array([1, 2, 3, 4, 5, 6, 7, 8], np.int32)
+    b = np.array([1, 2, 3, 4, 9, 9, 9, 9], np.int32)
+    pc.insert(a, synth_logits(a), synth_cache(a))
+    pc.insert(b, synth_logits(b), synth_cache(b))
+    # one shared first block, two sibling second blocks (+2 logits-only
+    # terminals — payload nodes under the same budget)
+    kv_nodes = [n for n in trie_nodes(pc) if n.kv is not None]
+    assert len(kv_nodes) == 3 and pc.n_blocks == 5
+    for toks in (a, b):
+        hit = pc.match(toks)
+        assert hit.full is not None
+        _, got = hit.full
+        np.testing.assert_array_equal(
+            np.asarray(got["self"]["k"]),
+            np.asarray(synth_cache(toks)["self"]["k"]))
+    pc.check_invariants()
+
+
+def test_insert_is_copy_not_alias(dense_cfg):
+    """COW discipline: mutating (or deleting) the inserted cache after the
+    fact must not change what later matches return."""
+    pc = PrefixCache(dense_cfg, block_size=4, budget_blocks=64)
+    toks = np.arange(1, 9, dtype=np.int32)
+    cache = synth_cache(toks)
+    want = np.asarray(cache["self"]["k"]).copy()
+    pc.insert(toks, synth_logits(toks), cache)
+    del cache                                   # engine donates it away
+    _, got = pc.match(toks).full
+    np.testing.assert_array_equal(np.asarray(got["self"]["k"]), want)
+
+
+def test_eviction_respects_budget_and_pins(dense_cfg):
+    pc = PrefixCache(dense_cfg, block_size=4, budget_blocks=3)
+    prompts = [np.arange(i, i + 8, dtype=np.int32) for i in range(0, 50, 10)]
+    for p in prompts:
+        pc.insert(p, synth_logits(p), synth_cache(p))
+        assert pc.n_blocks <= 3
+        pc.check_invariants()
+    assert pc.evictions > 0
+    # pin a partial hit, then insert under pressure: pinned blocks survive
+    last = prompts[-1]
+    probe = last.copy()
+    probe[4:] = [77, 77, 77, 77]
+    hit = pc.match(probe)
+    assert hit.hit and hit.pins
+    pinned = set(map(id, hit.pins))
+    for p in prompts[:3]:
+        pc.insert(p, synth_logits(p), synth_cache(p))
+        pc.check_invariants()
+    assert pinned <= set(map(id, trie_nodes(pc)))
+    pc.release(hit)
+    assert pc.n_blocks <= 3
+    pc.check_invariants()
+
+
+def test_nondense_families_exact_match_only():
+    cfg = reduced(get_config("falcon-mamba-7b"))
+    pc = PrefixCache(cfg, block_size=8, budget_blocks=8)
+    toks = np.arange(1, 13, dtype=np.int32)
+    state = (jnp.arange(6.0).reshape(2, 3), jnp.ones((2, 2)))
+    pc.insert(toks, synth_logits(toks), state)
+    # shared-prefix probe misses: recurrent states fold the whole prefix
+    probe = toks.copy()
+    probe[-1] = 999
+    assert not pc.match(probe).hit
+    hit = pc.match(toks)
+    assert hit.full is not None and hit.flops_avoided == hit.flops_total
+    np.testing.assert_array_equal(np.asarray(hit.full[1][0]),
+                                  np.asarray(state[0]))
+    pc.check_invariants()
+
+
+def test_vlm_roots_keyed_by_frontend(dense_cfg):
+    cfg = reduced(get_config("internvl2-1b"))
+    assert cfg.family == "vlm" and cfg.frontend_tokens > 0
+    pc = PrefixCache(cfg, block_size=4, budget_blocks=64)
+    F = cfg.frontend_tokens
+    toks = np.arange(1, 9, dtype=np.int32)
+    fe_a = np.ones((F, 4), np.float32)
+    fe_b = np.zeros((F, 4), np.float32)
+    rows = np.concatenate([np.zeros(F, np.int32), toks])  # prologue rows
+    pc.insert(toks, synth_logits(toks), synth_cache(rows), frontend=fe_a)
+    # same tokens, different image: different root, no hit
+    assert not pc.match(toks, frontend=fe_b).hit
+    hit = pc.match(toks, frontend=fe_a)
+    assert hit.full is not None and hit.q_rows == F + len(toks)
+    pc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# property harness: random interleaved schedules
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_interleaved_schedule_invariants(seed):
+    """Random insert/match/release/evict interleavings: refcounts stay
+    zero-sum, the budget holds, and every hit is value-exact."""
+    rng = np.random.default_rng(seed)
+    cfg = reduced(get_config("llama3.2-1b"))
+    pc = PrefixCache(cfg, block_size=4, budget_blocks=int(rng.integers(2, 7)))
+    alphabet = [1, 2, 3]
+    outstanding = []
+    for _ in range(30):
+        n = int(rng.integers(4, 13))
+        toks = rng.choice(alphabet, size=n).astype(np.int32)
+        op = rng.choice(["insert", "match", "release"])
+        if op == "insert":
+            pc.insert(toks, synth_logits(toks), synth_cache(toks))
+        elif op == "match":
+            hit = pc.match(toks)
+            if hit.full is not None:
+                _, got = hit.full
+                np.testing.assert_array_equal(
+                    np.asarray(got["self"]["k"]),
+                    np.asarray(synth_cache(toks)["self"]["k"]))
+            elif hit.prefix is not None:
+                q = hit.q_rows
+                np.testing.assert_array_equal(
+                    np.asarray(hit.prefix["self"]["k"]),
+                    np.asarray(synth_cache(toks)["self"]["k"][:, :, :q]))
+                outstanding.append(hit)
+        elif outstanding:
+            pc.release(outstanding.pop(int(rng.integers(len(outstanding)))))
+        pc.check_invariants()
+    for hit in outstanding:
+        pc.release(hit)
+    assert all(n.refs == 0 for n in trie_nodes(pc))
+    assert pc.n_blocks <= pc.budget_blocks
+    pc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# KV-hop compaction: lossless round trips, lossy gating
+# ---------------------------------------------------------------------------
+def _hop_roundtrip(S, q, hkv=2, dh=4, dtype=jnp.float32):
+    rng = np.random.default_rng(S * 100 + q)
+    k = jnp.asarray(rng.standard_normal((L, 1, S, hkv, dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((L, 1, S, hkv, dh)), dtype)
+    cache = {"self": {"k": k, "v": v}}
+    prefix = jax.tree.map(lambda a: a[:, :, :q], cache)
+    packed, wire = compact_kv_hop(cache, q)
+    raw = sum(a.size * a.dtype.itemsize
+              for a in (k, v))
+    restored = restore_kv_hop(packed, prefix)
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(restored["self"][name]),
+                                      np.asarray(cache["self"][name]))
+    return wire, raw
+
+
+@pytest.mark.parametrize("S,q,saves", [
+    (12, 5, True),    # unaligned everything
+    (16, 8, True),    # block-aligned split
+    (10, 9, True),    # single-row tail (capacity boundary: cap = 1)
+    (10, 1, False),   # single-row prefix: at this toy D the int32 index
+                      # map outweighs one saved row — wire accounting is
+                      # honest, not assumed-beneficial
+])
+def test_kv_hop_lossless_roundtrip_bitexact(S, q, saves):
+    wire, raw = _hop_roundtrip(S, q)
+    assert (wire < raw) == saves
+
+
+def test_kv_hop_roundtrip_padded_shapes():
+    # D = 160 > 128 forces feature padding; S tail > 128 forces row padding
+    wire, raw = _hop_roundtrip(12, 4, hkv=2, dh=80)
+    assert wire < raw
+    wire, raw = _hop_roundtrip(140, 130, hkv=1, dh=4)
+    assert wire < raw
+
+
+def test_kv_hop_bf16_roundtrip():
+    wire, raw = _hop_roundtrip(12, 6, dtype=jnp.bfloat16)
+    assert wire < raw
+
+
+def test_kv_hop_lossy_drops_low_salience_rows():
+    rng = np.random.default_rng(0)
+    S, q = 20, 4
+    k = jnp.asarray(rng.standard_normal((L, 1, S, HKV, DH)), jnp.float32)
+    cache = {"self": {"k": k, "v": k * 2}}
+    prefix = jax.tree.map(lambda a: a[:, :, :q], cache)
+    packed, wire_lossy = compact_kv_hop(cache, q, keep_rate=0.5)
+    _, wire_lossless = compact_kv_hop(cache, q)
+    assert not packed["lossless"]
+    assert wire_lossy < wire_lossless
+    restored = restore_kv_hop(packed, prefix)
+    got = np.asarray(restored["self"]["k"])
+    ref = np.asarray(cache["self"]["k"])
+    np.testing.assert_array_equal(got[:, :, :q], ref[:, :, :q])  # prefix kept
+    tail_got = got[0, 0, q:].reshape(S - q, -1)
+    tail_ref = ref[0, 0, q:].reshape(S - q, -1)
+    kept = [i for i in range(S - q)
+            if np.array_equal(tail_got[i], tail_ref[i])]
+    dropped = [i for i in range(S - q)
+               if not np.array_equal(tail_got[i], tail_ref[i])]
+    assert len(kept) == max(1, round(0.5 * (S - q)))
+    assert all(np.all(tail_got[i] == 0) for i in dropped)  # zeros, not junk
+
+
+def test_kv_hop_rejects_nothing_to_ship():
+    # q == S leaves no tail; callers must not ask for a hop then —
+    # the worker guards this, the helper documents it by raising
+    cache = {"self": {"k": jnp.ones((1, 1, 4, 1, 2)),
+                      "v": jnp.ones((1, 1, 4, 1, 2))}}
+    with pytest.raises(Exception):
+        compact_kv_hop(cache, 4)
+
+
+# ---------------------------------------------------------------------------
+# masked_compact / masking direct edge cases (satellite: the hop's parts)
+# ---------------------------------------------------------------------------
+def test_masked_compact_capacity_exactly_kept():
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.standard_normal((2, 8, 4)), jnp.float32)
+    mask = jnp.asarray([[1, 0, 1, 0, 1, 0, 0, 0],
+                        [1, 1, 1, 0, 0, 0, 0, 0]], bool)
+    out, idx, cnt = masked_compact(toks, mask, 3)   # capacity == max kept
+    o_ref, i_ref, c_ref = masked_compact_ref(toks, mask, 3)
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(c_ref))
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(i_ref))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(o_ref))
+    # kept rows land front-of-buffer in submission order: exact inverse
+    for b in range(2):
+        rows = [i for i in range(8) if mask[b, i]]
+        for j, i in enumerate(rows):
+            np.testing.assert_array_equal(np.asarray(out[b, j]),
+                                          np.asarray(toks[b, i]))
+
+
+def test_masked_compact_zero_kept_mask():
+    toks = jnp.ones((2, 8, 4), jnp.float32)
+    mask = jnp.zeros((2, 8), bool)
+    out, idx, cnt = masked_compact(toks, mask, 4)
+    assert np.all(np.asarray(cnt) == 0)
+    assert np.all(np.asarray(idx) == -1)
+    assert np.all(np.asarray(out) == 0)
+
+
+def test_compression_report_zero_kept_mask():
+    mask = jnp.zeros((3, 16), bool)
+    rep = compression_report(mask, capacity=4, d_model=8)
+    assert rep.kept_tokens == 0 and rep.keep_rate == 0.0
+    assert rep.bytes_after < rep.bytes_before   # index map only
+    assert 0.0 < rep.bandwidth_saving <= 1.0
+
+
+def test_make_mask_keep_rate_floor_and_ceiling():
+    scores = jnp.asarray(np.random.default_rng(1).standard_normal((2, 10)),
+                         jnp.float32)
+    assert int(make_mask(scores, 1e-9).sum(axis=-1).max()) == 1  # floor: 1
+    np.testing.assert_array_equal(np.asarray(make_mask(scores, 1.0)),
+                                  np.ones((2, 10), bool))
+
+
+def test_norm_scores_rank_high_energy_rows():
+    toks = np.zeros((1, 6, 4), np.float32)
+    toks[0, 2] = 10.0
+    toks[0, 5] = 7.0
+    m = np.asarray(make_mask(norm_scores(jnp.asarray(toks)), 0.34))
+    assert m[0, 2] and m[0, 5] and m.sum() == 2

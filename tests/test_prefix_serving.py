@@ -1,0 +1,222 @@
+"""Slow tier: prefix-cache serving end-to-end — cached-hit token streams
+must be BIT-IDENTICAL to cold-start across every cache family, on both
+admission paths (local shadow prefill and disaggregated dispatch through
+a PrefillWorker/PrefillWorkerPool with sender-compacted KV hops).
+
+The shared-prefix workload here is the cache's target traffic shape:
+most prompts extend one common system-prompt-like prefix, plus an exact
+duplicate (full hit — skips prefill AND the KV hop).  The reference is
+always the ``macro_steps=0`` per-step engine with NO cache: placement,
+reuse and compaction may move bytes around, never change them.
+
+Runs with the chaos/fault tier in CI's slow job; the fast job excludes
+it via ``-m "not slow"``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from repro.configs.base import get_config, reduced
+from repro.models import model as M
+from repro.serving.engine import ContinuousServingEngine, ServeRequest
+from repro.serving.prefill import (PrefillWorker, PrefillWorkerError,
+                                   PrefillWorkerPool)
+from repro.serving.prefix_cache import PrefixCache
+
+pytestmark = pytest.mark.slow
+
+SLOTS = 2
+MAX_LEN = 64
+PROMPT = 20
+SHARED = 16          # >= 50% overlap: 16 of 20 tokens are common
+MAX_NEWS = [3, 5, 2, 4, 6, 4]
+
+
+def _family_workload(arch: str, kv_int8: bool):
+    cfg = reduced(get_config(arch))
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_quant="int8")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    shared = rng.integers(0, cfg.vocab_size, (SHARED,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.integers(0, cfg.vocab_size,
+                              (PROMPT - SHARED,)).astype(np.int32)])
+        for _ in range(len(MAX_NEWS) - 1)]
+    prompts.append(prompts[0].copy())    # exact duplicate -> full hit
+    frontend = None
+    if cfg.frontend:
+        fe = rng.standard_normal(
+            (cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model)
+        ).astype(np.float32)
+        frontend = [fe] * len(prompts)   # same image: prefixes transfer
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=m,
+                         frontend=None if frontend is None else frontend[i])
+            for i, m in enumerate(MAX_NEWS)]
+    return cfg, params, reqs
+
+
+@pytest.mark.parametrize("arch,kv_int8", [
+    ("llama3.2-1b", False),       # transformer KV cache (radix trie)
+    ("falcon-mamba-7b", False),   # SSM states: exact-match caching only
+    ("zamba2-2.7b", False),       # hybrid backbone: exact-match only
+    ("internvl2-1b", True),       # vlm prologue + int8 decode cache
+])
+def test_cached_streams_bit_identical(arch, kv_int8):
+    cfg, params, reqs = _family_workload(arch, kv_int8)
+    base = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                   macro_steps=0)
+    ref, _ = base.run(reqs)
+    pc = PrefixCache(cfg, block_size=8, budget_blocks=64)
+    eng = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                  macro_steps=4, prefix_cache=pc,
+                                  share_from=base)
+    outs, stats = eng.run(reqs)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # the duplicate must hit in every family (dense families hit on the
+    # shared prefix too); the cache must actually save prefill work
+    assert stats.prefix_hits >= 1
+    assert stats.prefill_flops_avoided > 0
+    if cfg.family not in ("ssm", "hybrid"):
+        assert stats.prefix_hits >= len(reqs) - 1
+        assert stats.prefill_flops_avoided / stats.prefill_flops_total > 0.4
+    pc.check_invariants()
+    # second pass over the same stream: everything full-hits now
+    outs2, stats2 = eng.run(reqs)
+    for a, b in zip(ref, outs2):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert stats2.prefix_hits == len(reqs)
+    pc.check_invariants()
+
+
+def test_disaggregated_compacted_hops_bit_identical():
+    """Remote admission: the hub trie is consulted before dispatch, hits
+    resume on the prefill group, and only compacted tails cross back."""
+    cfg, params, reqs = _family_workload("llama3.2-1b", False)
+    base = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                   macro_steps=0)
+    ref, _ = base.run(reqs)
+    pc = PrefixCache(cfg, block_size=8, budget_blocks=64)
+    worker = PrefillWorker(cfg, params, device=jax.devices()[0],
+                           link=C.ICI_LINK)
+    eng = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                  macro_steps=4, prefill_worker=worker,
+                                  prefix_cache=pc, share_from=base)
+    outs, stats = eng.run(reqs)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert stats.prefix_hits >= len(reqs) - 1
+    # partial hits shipped compacted tails: strictly fewer wire bytes
+    assert 0 < stats.kv_hop_bytes_wire < stats.kv_hop_bytes_raw
+    # worker-side ledger agrees with the engine's per-run accounting
+    assert worker.kv_bytes_wire == pytest.approx(stats.kv_hop_bytes_wire)
+    assert worker.kv_bytes_raw == pytest.approx(stats.kv_hop_bytes_raw)
+    # the full hit (duplicate) never crossed the wire at all
+    assert stats.prefill_offloaded < len(reqs)
+    pc.check_invariants()
+
+
+def test_worker_pool_failover_absorbs_member_fault():
+    """A pool member dying mid-run is absorbed by ring failover — no
+    local fallback, streams unchanged, pool stays healthy."""
+    cfg, params, reqs = _family_workload("llama3.2-1b", False)
+    base = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                   macro_steps=0)
+    ref, _ = base.run(reqs)
+    pool = PrefillWorkerPool(cfg, params, size=2, device=jax.devices()[0],
+                             link=C.ICI_LINK)
+    pool.inject_fault("dispatch", after=0, worker=0)
+    eng = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                  macro_steps=4, prefill_worker=pool,
+                                  share_from=base)
+    outs, stats = eng.run(reqs)
+    for a, b in zip(ref, outs):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert pool.healthy and not pool.workers[0].healthy
+    assert stats.prefill_fallbacks == 0
+    assert stats.prefill_offloaded == len(reqs)
+    assert pool.workers[1].dispatched > 0
+
+
+def test_worker_pool_affinity_and_whole_pool_death():
+    cfg, params, reqs = _family_workload("llama3.2-1b", False)
+    pool = PrefillWorkerPool(cfg, params, size=3, device=jax.devices()[0],
+                             link=C.ICI_LINK)
+    batch = {"tokens": np.asarray(reqs[0].prompt[None])}
+    # same content -> same member every time (affinity), inflight routing
+    logits1, cache1 = pool.dispatch(batch)
+    owner = pool._inflight[id(logits1)]
+    logits2, cache2 = pool.dispatch(batch)
+    assert pool._inflight[id(logits2)] is owner
+    pool.fetch(logits1, cache1)
+    pool.fetch(logits2, cache2)
+    with pytest.raises(PrefillWorkerError):
+        pool.fetch(logits1, cache1)       # unknown in-flight block
+    pool.kill()
+    assert not pool.healthy
+    with pytest.raises(PrefillWorkerError):
+        pool.dispatch(batch)
+    pool.restore()
+    assert pool.healthy
+    logits3, cache3 = pool.dispatch(batch)
+    pool.fetch(logits3, cache3)
+
+
+def test_lossy_keep_rate_is_gated_and_shrinks_wire():
+    """The lossy hop knob is OFF by default; arming it must shrink wire
+    bytes further.  (Lossy streams may legitimately diverge — the knob
+    trades fidelity for bandwidth, so no bit-identity claim here.)"""
+    cfg, params, reqs = _family_workload("llama3.2-1b", False)
+    base = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                   macro_steps=0)
+    base.run(reqs)
+
+    def run(keep_rate):
+        pc = PrefixCache(cfg, block_size=8, budget_blocks=64)
+        w = PrefillWorker(cfg, params, device=jax.devices()[0],
+                          link=C.ICI_LINK, kv_keep_rate=keep_rate)
+        eng = ContinuousServingEngine(cfg, params, slots=SLOTS,
+                                      max_len=MAX_LEN, macro_steps=4,
+                                      prefill_worker=w, prefix_cache=pc,
+                                      share_from=base)
+        _, stats = eng.run(reqs)
+        return stats
+
+    lossless = run(None)
+    lossy = run(0.5)
+    assert 0 < lossy.kv_hop_bytes_wire < lossless.kv_hop_bytes_wire
+    assert lossy.kv_hop_bytes_raw == lossless.kv_hop_bytes_raw
+
+
+def test_runtime_prefix_telemetry_and_router_residual():
+    """HeteroRuntime threads the prefix counters into per-group, wave and
+    totals telemetry, and feeds the router's residual-prefill EWMA."""
+    cfg, params, reqs = _family_workload("llama3.2-1b", False)
+    d = jax.devices()[0]
+    hub = C.NodeGroup("hub", [d], C.JETSON_NANO)
+    spokes = [C.NodeGroup("aux1", [d], C.JETSON_XAVIER),
+              C.NodeGroup("prefill", [d], C.JETSON_XAVIER)]
+    topo = C.Topology.star(hub, spokes, C.ICI_LINK, prefill_spoke=2)
+    rt = C.HeteroRuntime(topo, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         prefix_cache_blocks=64, prefix_block_size=8,
+                         prefill_pool=2)
+    rt.add_task(cfg.name, cfg, params)
+    tagged = [dataclasses.replace(r, task=cfg.name) for r in reqs]
+    res = rt.serve(tagged + tagged, warm=False)
+    tot = res.telemetry["totals"]
+    assert tot["prefix_hits"] > 0
+    assert tot["prefill_flops_avoided_frac"] > 0.4
+    assert tot["kv_hop_bytes_wire"] <= tot["kv_hop_bytes_raw"]
+    wave0 = res.telemetry["waves"][0]
+    assert "prefix_hits" in wave0
+    assert any("prefix_hits" in g for g in wave0["per_group"].values())
+    # the router saw a residual < 1 once hits landed
+    assert rt.prefill_router.prefix_residual < 1.0
+    spec = rt.tasks[cfg.name]
+    assert isinstance(spec.prefill_worker, PrefillWorkerPool)
+    spec.prefix_cache.check_invariants()

@@ -101,6 +101,22 @@ def test_matrix_references_resolve(workflow):
             )
 
 
+def test_bench_matrix_covers_every_gate():
+    """The bench job must carry one matrix entry per serving gate: the
+    full fused-decode record plus each `--only` smoke section.  A new
+    section added to benchmarks/continuous_batching.py without a matrix
+    entry would silently never run in CI — this pins the set."""
+    doc = _load(WORKFLOW_DIR / "ci.yml")
+    bench = doc["jobs"]["bench"]
+    entries = bench["strategy"]["matrix"]["include"]
+    gates = {e["gate"] for e in entries}
+    assert gates == {"fused-decode", "overlap", "prefill", "prefix"}, gates
+    by_gate = {e["gate"]: e["args"] for e in entries}
+    for gate in ("overlap", "prefill", "prefix"):
+        assert by_gate[gate] == f"--only {gate}", by_gate[gate]
+    assert "--json" in by_gate["fused-decode"]
+
+
 def test_steps_have_exactly_one_action(workflow):
     path, doc = workflow
     for name, job in doc["jobs"].items():
