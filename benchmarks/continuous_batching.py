@@ -412,6 +412,80 @@ def _disaggregated_prefill_section(cfg, params, emit_fn) -> dict:
     }
 
 
+def _group_faults_section(cfg, params, emit_fn) -> dict:
+    """Fleet-wide fault domain (PR 8): a decode spoke killed MID-RUN on
+    a hub + two-spoke star.  The kill fires at wave 1, so in-flight
+    shares exist when the arm drops.  Gates:
+
+      * every request completes EXACTLY once — the dead spoke's slice is
+        re-queued onto survivors, no lost and no duplicated tokens,
+      * streams bit-identical to the all-healthy run (placement moves,
+        tokens never do),
+      * telemetry records the re-route (wave_requeued/wave_retries > 0,
+        the victim dead in the final group_alive map),
+      * tokens/s under one dead spoke >= 0.5x the healthy run: losing
+        one of two decode arms may halve throughput, not collapse it
+        (loose floor — CI hosts are shared and the recovery wave pays a
+        re-queue bubble).
+    """
+    rng = np.random.default_rng(11)
+    n, slots, wave = 24, 4, 4
+    prompts = rng.integers(0, cfg.vocab_size, (n, PROMPT)).astype(np.int32)
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=1 + (7 * i) % 6,
+                         task=cfg.name)
+            for i in range(n)]
+    dev = jax.devices()[0]
+
+    def _star():
+        return C.Topology.star(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                               [C.NodeGroup("aux0", [dev], C.JETSON_XAVIER),
+                                C.NodeGroup("aux1", [dev], C.JETSON_XAVIER)],
+                               C.ICI_LINK)
+
+    healthy_rt = C.HeteroRuntime(_star(), slots=slots, max_len=MAX_LEN,
+                                 macro_steps=MACRO_K)
+    healthy_rt.add_task(cfg.name, cfg, params)
+    healthy = healthy_rt.serve(reqs, split=0.5, wave=wave)
+    want = {o.uid: o.tokens for o in healthy.outputs[cfg.name]}
+    healthy_tok_s = healthy.telemetry["totals"]["tok_per_s"]
+
+    chaos_star = _star()
+    chaos_star.groups[1].inject_fault("dispatch", after=1)   # dies wave 1
+    chaos_rt = C.HeteroRuntime(chaos_star, slots=slots, max_len=MAX_LEN,
+                               macro_steps=MACRO_K)
+    chaos_rt.add_task(cfg.name, cfg, params)
+    chaos = chaos_rt.serve(reqs, split=0.5, wave=wave)
+    tot = chaos.telemetry["totals"]
+
+    got = {o.uid: o.tokens for o in chaos.outputs[cfg.name]}
+    assert sorted(got) == sorted(want), \
+        "lost or duplicated requests across the spoke kill"
+    for uid in want:
+        np.testing.assert_array_equal(want[uid], got[uid])
+    assert tot["wave_requeued"] >= 1, "kill never re-queued a share"
+    assert tot["wave_retries"] >= 1, "re-queued share never completed"
+    assert tot["group_alive"]["aux0"] is False
+    assert tot["group_alive"]["pri"] is True
+    assert not chaos_star.groups[1].alive
+    ratio = tot["tok_per_s"] / max(healthy_tok_s, 1e-9)
+    assert ratio >= 0.5, \
+        f"one dead spoke collapsed throughput: {ratio:.2f}x healthy"
+
+    emit_fn("faults.healthy_tok_s", 0.0, f"{healthy_tok_s:.1f}")
+    emit_fn("faults.one_dead_spoke_tok_s", 0.0, f"{tot['tok_per_s']:.1f}")
+    emit_fn("faults.tok_s_ratio", 0.0, f"{ratio:.2f}")
+    emit_fn("faults.wave_requeued", 0.0, tot["wave_requeued"])
+    emit_fn("faults.wave_retries", 0.0, tot["wave_retries"])
+    return {
+        "healthy": {"tok_per_s": round(healthy_tok_s, 1)},
+        "one_dead_spoke": {"tok_per_s": round(tot["tok_per_s"], 1),
+                           "wave_requeued": tot["wave_requeued"],
+                           "wave_retries": tot["wave_retries"],
+                           "group_alive": tot["group_alive"]},
+        "tok_s_ratio": round(ratio, 2),
+    }
+
+
 def _prefix_cache_section(cfg, params, emit_fn) -> dict:
     """Content-aware KV reuse (PR 7) on the cache's target traffic shape:
     a shared-prefix workload (80% token overlap — system-prompt-like
@@ -551,6 +625,10 @@ def main(emit_fn=emit, json_path=None, only=None):
         # CI smoke: just the prefix-cache / compacted-KV-hop gates
         _prefix_cache_section(cfg, params, emit_fn)
         return None
+    if only == "faults":
+        # CI smoke: just the kill-mid-run fleet recovery gates
+        _group_faults_section(cfg, params, emit_fn)
+        return None
 
     # the r sweep isolates the ARCHITECTURAL claim (slots vs static
     # batching), so both arms run the same per-token loop (macro_steps=0)
@@ -618,6 +696,8 @@ def main(emit_fn=emit, json_path=None, only=None):
                                                                 emit_fn),
         # --- cross-request prefix cache + compacted KV hops (PR 7) ------
         "prefix_cache": _prefix_cache_section(cfg, params, emit_fn),
+        # --- fleet-wide fault domain: kill-mid-run recovery (PR 8) ------
+        "group_faults": _group_faults_section(cfg, params, emit_fn),
     }
     if json_path:
         with open(json_path, "w") as fh:
@@ -669,10 +749,11 @@ if __name__ == "__main__":
                     help="write the fused-decode record here "
                          "(e.g. BENCH_decode.json)")
     ap.add_argument("--only", default=None,
-                    choices=("overlap", "prefill", "prefix"),
+                    choices=("overlap", "prefill", "prefix", "faults"),
                     help="run a single section (CI smoke): 'overlap' = "
                          "the overlapped-admission gates, 'prefill' = the "
                          "disaggregated-prefill gates, 'prefix' = the "
-                         "prefix-cache / compacted-KV-hop gates")
+                         "prefix-cache / compacted-KV-hop gates, 'faults' "
+                         "= the kill-mid-run fleet recovery gates")
     args = ap.parse_args()
     main(json_path=args.json, only=args.only)

@@ -15,17 +15,20 @@ masking    frame/token-level compression (§VI)
 """
 from repro.core.battery import BatteryState, available_power, offload_pressure
 from repro.core.curvefit import FittedModels, PolyFit, fit_profiles, polyfit
-from repro.core.mobility import MobilityModel, default_latency_curve
+from repro.core.mobility import (LinkTrace, MobilityModel,
+                                 default_latency_curve)
 from repro.core.network import (DCN_LINK, ICI_LINK, WIFI_2_4GHZ, WIFI_5GHZ,
                                 LinkModel, data_rate, offload_energy,
-                                offload_latency)
-from repro.core.offload import (NodeGroup, OffloadEngine, OffloadReport,
+                                offload_latency, with_bandwidth)
+from repro.core.offload import (GroupHealth, GroupTimeoutError,
+                                GroupUnavailableError, NodeGroup,
+                                OffloadEngine, OffloadReport,
                                 mesh_axis_sizes, padded_quota_batch,
                                 split_counts, split_sizes)
 from repro.core.profiler import (DeviceProfile, JETSON_NANO, JETSON_XAVIER,
                                  MeasuredProfile, WorkloadCost,
                                  analytic_profile, paper_profiles)
-from repro.core.scheduler import (ControllerConfig, OffloadDecision,
+from repro.core.scheduler import (Backoff, ControllerConfig, OffloadDecision,
                                   PrefillRoute, PrefillRouter,
                                   SchedulerConfig, SplitRatioController,
                                   TaskScheduler)

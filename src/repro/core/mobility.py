@@ -4,11 +4,18 @@ Distance model:      d(t) = (V_primary + V_auxiliary) · t
 Fitted latency:      L(d) = a1·d² − a2·d + a3
 Threshold control:   if L ≥ β → stop offloading (re-solve with smaller r,
                      fall back to local execution if no feasible r).
+
+:class:`LinkTrace` (PR 8) closes the loop between this model and the live
+serving runtime: a per-edge trace of distance (and optionally bandwidth)
+samples is replayed on the wave clock, updating each edge's
+:class:`~repro.core.network.LinkModel` every wave — the β-threshold latch
+forces that edge local while the fitted latency prices out and re-opens
+it when the trace drops back below β.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -42,3 +49,89 @@ def latency_at(curve: PolyFit, mob: MobilityModel, t_s):
 def should_offload(curve: PolyFit, mob: MobilityModel, t_s):
     """paper: If L ≥ β, stop sending data."""
     return latency_at(curve, mob, t_s) < mob.beta
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class LinkTrace:
+    """Mobility-driven churn for ONE topology edge, replayed per wave.
+
+    ``distances`` are meters sampled on the serve wave clock (clamped at
+    the last sample once the trace runs out); with no explicit samples
+    the default drift ``d(t) = (V_primary + V_auxiliary)·t`` applies at
+    ``wave_dt_s`` seconds per wave.  ``bandwidths`` optionally overrides
+    the live bandwidth per wave; otherwise WiFi-mode links follow the
+    traced distance through their path-loss term and ICI-mode links are
+    derated by the fitted latency ratio versus the trace start.  The
+    latency curve defaults to :func:`default_latency_curve` and the
+    β-threshold to :class:`MobilityModel` — the paper's §V-A.5 stop
+    condition, evaluated per wave by :meth:`feasible`.
+    """
+    distances: Tuple[float, ...] = ()
+    bandwidths: Tuple[float, ...] = ()   # explicit bandwidth_hz per wave
+    curve: Optional[PolyFit] = None
+    mob: MobilityModel = field(default_factory=MobilityModel)
+    wave_dt_s: float = 1.0               # wave clock → seconds for the drift
+
+    def __post_init__(self):
+        if self.curve is None:
+            self.curve = default_latency_curve()
+        self.distances = tuple(float(d) for d in self.distances)
+        self.bandwidths = tuple(float(b) for b in self.bandwidths)
+
+    @staticmethod
+    def _sample(seq: Tuple[float, ...], wave: int) -> float:
+        return seq[min(int(wave), len(seq) - 1)]
+
+    def distance_at(self, wave: int) -> float:
+        if self.distances:
+            return self._sample(self.distances, wave)
+        return float(distance(self.mob, wave * self.wave_dt_s))
+
+    def latency_at(self, wave: int) -> float:
+        """Fitted link latency L(d) at this wave's traced distance."""
+        return float(self.curve(self.distance_at(wave)))
+
+    def feasible(self, wave: int) -> bool:
+        """β latch (paper §V-A.5): offload only while L(d) < β."""
+        return self.latency_at(wave) < self.mob.beta
+
+    def bandwidth_at(self, link, wave: int) -> float:
+        """The edge's live bandwidth_hz this wave."""
+        if self.bandwidths:
+            return self._sample(self.bandwidths, wave)
+        if not link.is_ici:
+            # WiFi mode: distance enters the Shannon–Hartley rate through
+            # the path-loss term — the nominal channel width is unchanged
+            return float(link.bandwidth_hz)
+        l0 = max(float(self.curve(self.distance_at(0))), 1e-9)
+        return float(link.bandwidth_hz
+                     * min(1.0, l0 / max(self.latency_at(wave), 1e-9)))
+
+    def link_at(self, link, wave: int):
+        """``link`` updated to this wave's traced bandwidth."""
+        bw = self.bandwidth_at(link, wave)
+        if bw == link.bandwidth_hz:
+            return link
+        from repro.core.network import with_bandwidth
+        return with_bandwidth(link, bw)
+
+    @classmethod
+    def from_spec(cls, spec: str, *,
+                  beta: Optional[float] = None) -> "LinkTrace":
+        """Parse a ``--link-trace`` CLI spec: comma-separated distances
+        in meters (``"4,12,28,12,4"``), or ``@path`` to a JSON file with
+        optional ``distances`` / ``bandwidths`` arrays.  ``beta``
+        overrides the MobilityModel latency threshold."""
+        mob = MobilityModel() if beta is None else MobilityModel(beta=beta)
+        if spec.startswith("@"):
+            import json
+            with open(spec[1:]) as fh:
+                payload = json.load(fh)
+            return cls(distances=tuple(payload.get("distances", ())),
+                       bandwidths=tuple(payload.get("bandwidths", ())),
+                       mob=mob)
+        ds = tuple(float(x) for x in spec.split(",") if x.strip())
+        if not ds:
+            raise ValueError(f"empty --link-trace spec {spec!r}")
+        return cls(distances=ds, mob=mob)

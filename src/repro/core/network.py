@@ -29,6 +29,13 @@ class LinkModel:
     congestion: float = 0.0      # fractional derating for ICI
 
 
+def with_bandwidth(link: LinkModel, bandwidth_hz: float) -> LinkModel:
+    """A copy of ``link`` at a different live bandwidth — the mobility
+    trace's per-wave update; powers, path loss and mode are preserved."""
+    import dataclasses
+    return dataclasses.replace(link, bandwidth_hz=float(bandwidth_hz))
+
+
 def data_rate(link: LinkModel, distance_m=1.0):
     """bits/s (WiFi mode) or bytes/s (ICI mode)."""
     if link.is_ici:

@@ -22,7 +22,7 @@ shim so the paper-faithful call sites keep working.  Two execution modes:
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -30,6 +30,88 @@ import jax.numpy as jnp
 
 from repro.core.network import LinkModel, offload_energy, offload_latency
 from repro.core.profiler import DeviceProfile
+
+
+class GroupUnavailableError(RuntimeError):
+    """A node group is unreachable (killed, partitioned, crashed): work
+    dispatched to it must fail fast with the group named, not hang the
+    wave.  The serving runtime catches this to re-queue the group's slice
+    onto surviving groups."""
+
+    def __init__(self, group: str, msg: str = ""):
+        self.group = group
+        super().__init__(msg or f"node group {group!r} is unavailable")
+
+
+class GroupTimeoutError(GroupUnavailableError):
+    """The group did not complete within the per-group await timeout
+    (``OffloadEngine(group_timeout_s=...)``) — a wedged arm, distinct
+    from an outright crash so callers can tell them apart."""
+
+
+@dataclass
+class GroupHealth:
+    """Chaos/health surface for a :class:`NodeGroup`, mirroring
+    ``PrefillWorker.kill()/restore()/inject_fault()`` so ANY group in the
+    topology — decode spokes, the hub's offload arms, not just the
+    prefill spoke — can be killed, wedged, or restored mid-serve.
+
+    ``check(kind)`` is the enforcement point: engines call it once per
+    dispatch/await of the group; it raises :class:`GroupUnavailableError`
+    when the group is down or an armed one-shot fault fires on the
+    (``after``+1)-th call of that kind.  ``wedge()`` simulates a hung arm
+    that never completes — only an engine's ``group_timeout_s`` clock can
+    surface it (as :class:`GroupTimeoutError`).  Production code never
+    arms faults; the chaos tier (``tests/test_group_faults.py``) does.
+    """
+    alive: bool = True
+    wedged: bool = False
+    _fault: Optional[Tuple[str, int, bool]] = None
+    _calls: Dict[str, int] = field(default_factory=dict)
+
+    KINDS = ("dispatch", "await")
+
+    def kill(self) -> None:
+        """Simulate losing the group (node crash / partition)."""
+        self.alive = False
+
+    def restore(self) -> None:
+        """Simulate the group coming back (reboot, partition healed).
+        Clears any armed fault, wedge and call counters so the revived
+        group starts clean — re-probe clocks pick it up from here."""
+        self.alive = True
+        self.wedged = False
+        self._fault = None
+        self._calls = {}
+
+    def wedge(self) -> None:
+        """Arm a hang: the group stays ``alive`` but never completes —
+        awaits on it only return via an engine's ``group_timeout_s``."""
+        self.wedged = True
+
+    def inject_fault(self, kind: str = "dispatch", *, after: int = 0,
+                     timeout: bool = False) -> None:
+        """Arm a one-shot fault: the (``after``+1)-th ``check(kind)``
+        kills the group and raises (:class:`GroupTimeoutError` when
+        ``timeout``)."""
+        if kind not in self.KINDS:
+            raise ValueError(f"kind must be one of {self.KINDS}")
+        self._fault = (kind, int(after), bool(timeout))
+
+    def check(self, kind: str, name: str = "group") -> None:
+        """Raise if the group is down or an armed fault fires now."""
+        if not self.alive:
+            raise GroupUnavailableError(name, f"node group {name!r} is down")
+        self._calls[kind] = self._calls.get(kind, 0) + 1
+        if self._fault is not None and self._fault[0] == kind \
+                and self._calls[kind] > self._fault[1]:
+            _, _, timeout = self._fault
+            self._fault = None            # one-shot: spent once fired
+            self.alive = False
+            err = GroupTimeoutError if timeout else GroupUnavailableError
+            raise err(name, f"node group {name!r} "
+                      f"{'timed out' if timeout else 'died'} on "
+                      f"{kind} #{self._calls[kind]}")
 
 
 def mesh_axis_sizes(n_devices: int, n_axes: int,
@@ -77,6 +159,22 @@ class NodeGroup:
     name: str
     devices: List[Any]
     profile: DeviceProfile
+    health: GroupHealth = field(default_factory=GroupHealth)
+
+    # -- chaos delegates (the PrefillWorker surface, fleet-wide) --------
+    @property
+    def alive(self) -> bool:
+        return self.health.alive
+
+    def kill(self) -> None:
+        self.health.kill()
+
+    def restore(self) -> None:
+        self.health.restore()
+
+    def inject_fault(self, kind: str = "dispatch", *, after: int = 0,
+                     timeout: bool = False) -> None:
+        self.health.inject_fault(kind, after=after, timeout=timeout)
 
     def mesh(self, axes=("data",), axis_sizes: Optional[Sequence[int]] = None):
         import numpy as _np
@@ -136,6 +234,18 @@ class OffloadReport:
                                     # prefill→decode hops
     kv_hop_bytes_wire: float = 0.0  # bytes that actually crossed (tail
                                     # rows, sender-compacted)
+    # --- fleet-wide fault domain (PR 8) -----------------------------------
+    group_alive: Tuple[bool, ...] = ()  # liveness per DECODE group this wave
+                                        # (ordered like group_names); dead
+                                        # groups carry zero counts so the
+                                        # controller skips their timings
+    wave_requeued: int = 0      # requests re-queued onto survivors after a
+                                # mid-wave group failure
+    wave_retries: int = 0       # re-queued requests completing this wave
+    link_bw_hz: Tuple[float, ...] = ()  # live traced bandwidth per decode
+                                        # edge (hub entry 0.0)
+    mobility_latched: int = 0   # decode edges forced local this wave by the
+                                # β-threshold mobility latch (§V-A.5)
     # --- scale-out timing decomposition (PR 6) ----------------------------
     # Summed ContinuousStats buckets across the wave's engines; on fused
     # paths decode wall == t_dispatch_s + t_await_s per engine (see
@@ -234,7 +344,8 @@ class OffloadEngine:
                  topology: Optional[Any] = None,
                  payload_bytes_per_item: float,
                  distance_fn: Callable[[], float] = lambda: 1.0,
-                 jit: bool = True):
+                 jit: bool = True,
+                 group_timeout_s: Optional[float] = None):
         if topology is None:
             if primary is None or auxiliary is None or link is None:
                 raise ValueError("pass either topology= or the 2-node "
@@ -246,6 +357,13 @@ class OffloadEngine:
         self.payload_bytes_per_item = payload_bytes_per_item
         self.distance_fn = distance_fn
         self.jit = jit  # False for host-loop tasks (e.g. a generate() loop)
+        # per-group await deadline (None = off, the historical behavior):
+        # a group still pending past this wall is killed and surfaced as
+        # GroupTimeoutError instead of blocking the wave forever
+        if group_timeout_s is not None and group_timeout_s <= 0.0:
+            raise ValueError(f"group_timeout_s must be > 0, "
+                             f"got {group_timeout_s}")
+        self.group_timeout_s = group_timeout_s
         self._compiled: Dict[Tuple[str, int], Any] = {}
 
     # --- 2-node legacy aliases (deprecation shim) ----------------------
@@ -282,24 +400,54 @@ class OffloadEngine:
     def _slice_batch(batch, lo, hi):
         return jax.tree.map(lambda a: a[lo:hi], batch)
 
-    @staticmethod
-    def _await_groups(in_flight: Dict[str, Any], t0: float) -> Dict[str, float]:
+    def _await_groups(self, in_flight: Dict[str, Any], t0: float,
+                      healths: Optional[Dict[str, GroupHealth]] = None
+                      ) -> Dict[str, float]:
         """Wait for every in-flight output, stamping each group's completion
         time relative to the joint dispatch WITHOUT serializing on the other
         groups (blocking on one first would inflate the others' timestamps
-        and the controller would never see a faster group)."""
+        and the controller would never see a faster group).
+
+        Await-stage health checks fire armed ``kind="await"`` faults
+        before blocking; a wedged group is never considered ready, so the
+        ``group_timeout_s`` clock surfaces it as
+        :class:`GroupTimeoutError` (with no timeout configured the wedge
+        is raised immediately rather than hanging the host forever)."""
+        healths = healths or {}
         pending = {name: jax.tree.leaves(out)
                    for name, out in in_flight.items() if out is not None}
         done = {name: 0.0 for name in in_flight}
+        for name in list(pending):
+            h = healths.get(name)
+            if h is not None:
+                h.check("await", name)
+                if h.wedged and self.group_timeout_s is None:
+                    h.kill()
+                    raise GroupUnavailableError(
+                        name, f"node group {name!r} is wedged and no "
+                        "group_timeout_s is configured — refusing to hang")
         pollable = all(hasattr(leaf, "is_ready")
                        for leaves in pending.values() for leaf in leaves)
         if pollable:
             while pending:
                 for name in list(pending):
+                    h = healths.get(name)
+                    if h is not None and h.wedged:
+                        continue   # simulated hang: only the timeout ends it
                     if all(leaf.is_ready() for leaf in pending[name]):
                         done[name] = time.perf_counter() - t0
                         del pending[name]
                 if pending:
+                    if self.group_timeout_s is not None and \
+                            time.perf_counter() - t0 > self.group_timeout_s:
+                        for name in pending:
+                            h = healths.get(name)
+                            if h is not None:
+                                h.kill()
+                        raise GroupTimeoutError(
+                            next(iter(pending)),
+                            f"groups {sorted(pending)} still pending after "
+                            f"{self.group_timeout_s}s await timeout")
                     time.sleep(1e-4)
         else:
             for name, leaves in pending.items():
@@ -358,19 +506,24 @@ class OffloadEngine:
         t0 = time.perf_counter()
         if self.jit:
             # --- dispatch phase: launch ALL groups, await NONE ---------
-            # spokes first: they pay link latency on top of exec
+            # spokes first: they pay link latency on top of exec.  A dead
+            # arm raises the typed error HERE, before any launch hangs.
             for g in list(range(1, G)) + [0]:
                 if counts[g]:
+                    groups[g].health.check("dispatch", groups[g].name)
                     sl = self._slice_batch(batch, *bounds[g])
                     out[g] = self._get_fn(groups[g], sl)(sl)
             # --- await phase: completion timestamps vs joint dispatch --
             done = self._await_groups(
-                {groups[g].name: out[g] for g in range(G)}, t0)
+                {groups[g].name: out[g] for g in range(G)}, t0,
+                healths={groups[g].name: groups[g].health
+                         for g in range(G) if counts[g]})
             t_group = [done[groups[g].name] for g in range(G)]
             t_par = time.perf_counter() - t0
         else:
             for g in [0] + list(range(1, G)):  # hub first, like PR 1
                 if counts[g]:
+                    groups[g].health.check("dispatch", groups[g].name)
                     t1 = time.perf_counter()
                     out[g] = jax.block_until_ready(
                         self.task_fn(self._slice_batch(batch, *bounds[g])))

@@ -60,8 +60,54 @@ class SchedulerConfig:
     lambda_mem: float = 0.95            # availability factor gate (Alg. 1 line 3)
     power_threshold_w: float = 8.0      # battery pressure threshold
     ema: float = 0.3                    # profile update smoothing
+    reprobe_after: int = 2              # waves before the first down-state
+                                        # re-probe of a dead group
+    reprobe_max: int = 32               # re-probe backoff ceiling (waves)
     solver_constraints: SolverConstraints = field(
         default_factory=lambda: SolverConstraints(tau=1.0))
+
+
+class Backoff:
+    """Bounded exponential re-probe schedule on the wave clock.
+
+    Shared by every recovery path that must rejoin a restored resource
+    without polling it every wave: the :class:`PrefillRouter`'s latched-
+    local auto re-probe and the :class:`~repro.core.topology.HeteroRuntime`
+    decode-group re-probe both run this exact state machine.  ``tick()``
+    advances one wave and returns True on probe waves; a failed probe
+    (``fail()``) doubles the wait up to ``maximum``; ``reset()`` re-arms
+    after a successful revive.  Bound: a group restored at any point is
+    re-probed within ``maximum`` waves of the restore.
+    """
+
+    def __init__(self, after: int = 2, maximum: int = 32):
+        if after < 1:
+            raise ValueError(f"backoff after must be >= 1, got {after}")
+        if maximum < after:
+            raise ValueError(f"backoff maximum {maximum} < after {after}")
+        self.after = int(after)
+        self.maximum = int(maximum)
+        self.waves = 0               # waves since the last probe / reset
+        self.next_probe = self.after
+
+    @classmethod
+    def from_config(cls, cfg: "SchedulerConfig") -> "Backoff":
+        return cls(cfg.reprobe_after, cfg.reprobe_max)
+
+    def reset(self) -> None:
+        """Re-arm (resource revived, or freshly latched down)."""
+        self.waves = 0
+        self.next_probe = self.after
+
+    def tick(self) -> bool:
+        """Advance one wave; True iff this wave is a probe wave."""
+        self.waves += 1
+        return self.waves >= self.next_probe
+
+    def fail(self) -> None:
+        """The probe found the resource still down: double the wait."""
+        self.waves = 0
+        self.next_probe = min(self.next_probe * 2, self.maximum)
 
 
 class TaskScheduler:
@@ -267,11 +313,33 @@ class PrefillRouter:
         # from hops that were already compacted.
         self.prefix_residual = 1.0
         self.healthy = True
+        # mobility latch (paper §V-A.5): set per wave by the runtime from
+        # the edge's LinkTrace — while the fitted link latency is past β
+        # the route is forced local regardless of the priced comparison,
+        # and it re-opens the first wave the trace drops back below β.
+        self.mobility_latched = False
         self._remote_streak = 0    # consecutive remote waves since the
                                    # local rate was last measured
-        self._down_waves = 0       # waves since the last down-state probe
-        self._next_probe = self.reprobe_after
+        self._backoff = Backoff(self.reprobe_after, self.reprobe_max)
         self.history: List[PrefillRoute] = []
+
+    # backoff internals, kept addressable under their historical names
+    # (tests and dashboards read the probe clock directly)
+    @property
+    def _down_waves(self) -> int:
+        return self._backoff.waves
+
+    @_down_waves.setter
+    def _down_waves(self, v: int) -> None:
+        self._backoff.waves = int(v)
+
+    @property
+    def _next_probe(self) -> int:
+        return self._backoff.next_probe
+
+    @_next_probe.setter
+    def _next_probe(self, v: int) -> None:
+        self._backoff.next_probe = int(v)
 
     def _ewma(self, old: Optional[float], new: float) -> float:
         return new if old is None else (1 - self.ema) * old + self.ema * new
@@ -325,15 +393,13 @@ class PrefillRouter:
         if fallbacks > 0:
             if self.healthy:
                 # freshly latched: restart the re-probe backoff clock
-                self._down_waves = 0
-                self._next_probe = self.reprobe_after
+                self._backoff.reset()
             self.healthy = False
 
     def revive(self) -> None:
         """Re-arm a latched-down router (the group came back)."""
         self.healthy = True
-        self._down_waves = 0
-        self._next_probe = self.reprobe_after
+        self._backoff.reset()
 
     def maybe_revive(self, group_alive: bool) -> bool:
         """Bounded-backoff auto re-probe off the wave clock.
@@ -341,21 +407,20 @@ class PrefillRouter:
         ``revive()`` used to be operator-only, so a latched-local router
         stayed local forever after a transient prefill-group outage.
         Called once per wave (before ``route()``): while latched down,
-        count waves and probe the group's health every ``reprobe_after``
-        waves, doubling the wait after each failed probe up to
-        ``reprobe_max``; the first probe that finds the group alive
-        revives the router.  Returns True iff it revived this wave.
+        the shared :class:`Backoff` counts waves and probes the group's
+        health every ``reprobe_after`` waves, doubling the wait after
+        each failed probe up to ``reprobe_max``; the first probe that
+        finds the group alive revives the router.  Returns True iff it
+        revived this wave.
         """
         if self.healthy:
             return False
-        self._down_waves += 1
-        if self._down_waves < self._next_probe:
+        if not self._backoff.tick():
             return False
         if group_alive:
             self.revive()
             return True
-        self._down_waves = 0
-        self._next_probe = min(self._next_probe * 2, self.reprobe_max)
+        self._backoff.fail()
         return False
 
     def route(self) -> PrefillRoute:
@@ -367,6 +432,11 @@ class PrefillRouter:
         elif not self.healthy:
             dec = PrefillRoute(False, self.rate_local or 0.0, float("inf"),
                                "prefill group down")
+        elif self.mobility_latched:
+            # β latch: the traced link latency priced the hop infeasible —
+            # local this wave no matter what the EWMA comparison says
+            dec = PrefillRoute(False, self.rate_local or 0.0, float("inf"),
+                               "mobility: link latency past beta")
         elif self.rate_local is None:
             if self.rate_remote is None:
                 # cold start: nothing measured at all — price the group
@@ -442,23 +512,52 @@ class SplitRatioController:
         self._spoke_links: List[Optional[float]] = [None] * (self.n_groups - 1)
         self._r = self._clip(self.cfg.r_init)
         self._fractions = np.full(self.n_groups, 1.0 / self.n_groups)
+        self._alive = np.ones(self.n_groups, bool)
         self._seen = 0
         self._batch = 0
         self.history: List[SolverResult] = []
 
+    # --- fleet fault domain: surviving-simplex masking -----------------
+    def set_alive(self, alive: Sequence[bool]) -> None:
+        """Mask dead groups out of the simplex (hub-first order).  Every
+        read of ``fractions`` / ``split_counts`` then projects the solved
+        split onto the surviving groups: dead fractions exactly 0, the
+        rest renormalized.  Raising on an all-dead mask keeps the failure
+        loud — the runtime must stop serving, not divide by zero."""
+        a = np.asarray(list(alive), bool)
+        if a.shape != (self.n_groups,):
+            raise ValueError(f"alive mask has {a.shape[0] if a.ndim else 0} "
+                             f"entries for {self.n_groups} groups")
+        if not a.any():
+            raise ValueError("every group is masked dead — nothing can "
+                             "take the wave")
+        self._alive = a
+
+    def _masked(self, f: np.ndarray) -> np.ndarray:
+        """Project fractions onto the surviving simplex."""
+        f = np.where(self._alive, np.maximum(np.asarray(f, np.float64), 0.0),
+                     0.0)
+        s = f.sum()
+        if s <= 0.0:
+            # every survivor solved to zero: split the wave evenly
+            f = self._alive.astype(np.float64)
+            s = f.sum()
+        return f / s
+
     @property
     def r(self) -> float:
         """Total offloaded share (1 − hub fraction for star topologies)."""
-        if self.n_groups > 2:
-            return float(1.0 - self._fractions[0])
-        return self._r
+        return float(1.0 - self.fractions[0])
 
     @property
     def fractions(self) -> np.ndarray:
-        """Per-group SplitVector fractions, hub first."""
-        if self.n_groups > 2:
-            return self._fractions.copy()
-        return np.array([1.0 - self._r, self._r])
+        """Per-group SplitVector fractions, hub first — masked onto the
+        surviving simplex when groups are dead."""
+        base = (self._fractions.copy() if self.n_groups > 2
+                else np.array([1.0 - self._r, self._r]))
+        if self._alive.all():
+            return base
+        return self._masked(base)
 
     def _clip(self, r: float) -> float:
         """Solver output clipped to [r_min, r_max], then held away from the
@@ -479,17 +578,21 @@ class SplitRatioController:
 
     def split_counts(self, n: int) -> Tuple[int, ...]:
         """Per-group item counts (hub first) at the current split.  The
-        pair case routes through :meth:`split` (bit-compat with PR 1);
-        star uses largest-remainder apportionment with the exploration
-        floor — every group keeps at least one item when n allows, so no
-        group's EWMA rate ever goes dark."""
-        if self.n_groups == 2:
+        all-healthy pair case routes through :meth:`split` (bit-compat
+        with PR 1); star (and any masked topology) uses largest-remainder
+        apportionment with the exploration floor — every SURVIVING group
+        keeps at least one item when n allows, so no live group's EWMA
+        rate ever goes dark, while dead groups get exactly zero."""
+        if self.n_groups == 2 and self._alive.all():
             n_off = self.split(n)
             return (n - n_off, n_off)
         from repro.core.offload import split_counts as _apportion
-        counts = list(_apportion(tuple(self._fractions), n))
-        if self.cfg.explore > 0.0 and n >= self.n_groups:
-            for g in range(self.n_groups):
+        fr = (self.fractions if not self._alive.all()
+              else self._fractions)
+        counts = list(_apportion(tuple(fr), n))
+        live = [g for g in range(self.n_groups) if self._alive[g]]
+        if self.cfg.explore > 0.0 and n >= len(live):
+            for g in live:
                 while counts[g] == 0:
                     donor = int(np.argmax(counts))
                     counts[donor] -= 1
@@ -592,6 +695,10 @@ class SplitRatioController:
         if e > 0.0:
             f = np.maximum(f, e / max(self.n_groups - 1, 1))
             f = f / f.sum()
+        if not self._alive.all():
+            # re-solve lands on the surviving simplex: dead groups carry
+            # stale EWMA rates, so their share is forced to exactly zero
+            f = self._masked(f)
         self._fractions = f
         t_base = float(loc * B)
         self.history.append(SolverResult(

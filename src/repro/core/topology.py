@@ -33,9 +33,11 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.network import LinkModel, offload_latency
-from repro.core.offload import NodeGroup, OffloadReport, split_counts
-from repro.core.scheduler import (ControllerConfig, PrefillRouter,
+from repro.core.mobility import LinkTrace
+from repro.core.network import LinkModel, data_rate, offload_latency
+from repro.core.offload import (GroupUnavailableError, NodeGroup,
+                                OffloadReport, split_counts)
+from repro.core.scheduler import (Backoff, ControllerConfig, PrefillRouter,
                                   SplitRatioController)
 from repro.serving.engine import (ContinuousServingEngine, RequestOutput,
                                   ServeRequest)
@@ -70,6 +72,25 @@ class SplitVector:
     def r(self) -> float:
         """Total offloaded share (1 − hub fraction); the paper's r."""
         return 1.0 - self.fractions[0]
+
+    def masked(self, alive: Sequence[bool]) -> "SplitVector":
+        """Re-project onto the surviving simplex: dead groups drop to
+        exactly 0, survivors renormalize (even split over survivors when
+        every surviving fraction was 0).  Raises when the mask kills
+        every group — there is nowhere left to send the wave."""
+        alive = tuple(bool(a) for a in alive)
+        if len(alive) != len(self.fractions):
+            raise ValueError(f"alive mask has {len(alive)} entries for "
+                             f"{len(self.fractions)} groups")
+        if not any(alive):
+            raise GroupUnavailableError(
+                "all", "every group is masked dead — nothing can take "
+                "the wave")
+        fr = [f if a else 0.0 for f, a in zip(self.fractions, alive)]
+        if sum(fr) <= 0.0:
+            n_live = sum(alive)
+            fr = [1.0 / n_live if a else 0.0 for a in alive]
+        return SplitVector(tuple(fr))
 
     def __len__(self) -> int:
         return len(self.fractions)
@@ -257,7 +278,10 @@ class HeteroRuntime:
                  link_distance: float = 1.0,
                  prefix_cache_blocks: int = 0, prefix_block_size: int = 8,
                  prefill_pool: int = 1,
-                 kv_keep_rate: Optional[float] = None):
+                 kv_keep_rate: Optional[float] = None,
+                 link_traces: Optional[Dict[Union[int, str],
+                                            LinkTrace]] = None,
+                 reprobe_after: int = 2, reprobe_max: int = 32):
         self.topology = topology
         self.slots = slots
         self.max_len = max_len
@@ -280,6 +304,32 @@ class HeteroRuntime:
             raise ValueError(f"prefill_pool must be >= 1, got {prefill_pool}")
         # gated LOSSY hop knob — None (default) keeps hops lossless
         self.kv_keep_rate = kv_keep_rate
+        # mobility-driven link churn (PR 8): per-edge LinkTrace replayed
+        # on the serve wave clock, keyed by spoke index (1..) or group
+        # name — the hub has no link, so it can't be traced
+        self.link_traces: Dict[int, LinkTrace] = {}
+        names = [g.name for g in topology.groups]
+        for key, tr in (link_traces or {}).items():
+            if isinstance(key, str):
+                if key not in names:
+                    raise ValueError(f"link_traces key {key!r} names no "
+                                     f"group (have {names})")
+                gi = names.index(key)
+            else:
+                gi = int(key)
+            if not 1 <= gi < len(names):
+                raise ValueError(
+                    f"link_traces key {key!r} must name a spoke "
+                    f"(1..{len(names) - 1}) — the hub crosses no link")
+            self.link_traces[gi] = tr
+        # dead-group re-probe clock bounds (the PrefillRouter shares the
+        # same Backoff helper and defaults)
+        self.reprobe_after = int(reprobe_after)
+        self.reprobe_max = int(reprobe_max)
+        # workers killed BY the prefill group's health (vs. worker-level
+        # faults): persists across serve calls so a group restore()
+        # between calls still revives exactly the workers we killed
+        self._pf_group_killed = False
         # decode waves are split over every group EXCEPT the dedicated
         # prefill spoke (when one is marked) — that group serves KV blocks
         self._decode = topology.decode_indices()
@@ -399,12 +449,17 @@ class HeteroRuntime:
         raise KeyError(f"request {req.uid} is untagged but "
                        f"{len(self.tasks)} tasks are registered")
 
-    def _split_for(self, n: int, split) -> Tuple[SplitVector, Tuple[int, ...]]:
+    def _split_for(self, n: int, split,
+                   alive: Optional[Tuple[bool, ...]] = None
+                   ) -> Tuple[SplitVector, Tuple[int, ...]]:
         """Resolve this wave's SplitVector + per-DECODE-group counts
         (hub first; the dedicated prefill spoke takes no decode share).
         ``split``: None → live controller (with its exploration floor),
-        scalar r or SplitVector/sequence → fixed."""
+        scalar r or SplitVector/sequence → fixed.  ``alive`` masks dead
+        decode groups onto the surviving simplex (exactly 0 items)."""
         D = len(self._decode)
+        if alive is not None and all(alive):
+            alive = None
         if D == 1:
             # pure disaggregation: the hub is the only decode group — an
             # explicit split is only accepted when it says exactly that
@@ -423,6 +478,8 @@ class HeteroRuntime:
                         "split=None, 0.0 or a 1-element vector is valid")
             return SplitVector((1.0,)), (n,)
         if split is None:
+            self.controller.set_alive(alive if alive is not None
+                                      else (True,) * D)
             counts = self.controller.split_counts(n)
             return SplitVector(self.controller.fractions), counts
         if isinstance(split, SplitVector):
@@ -434,6 +491,8 @@ class HeteroRuntime:
         if len(sv) != D:
             raise ValueError(f"split has {len(sv)} fractions for {D} "
                              "decode groups")
+        if alive is not None:
+            sv = sv.masked(alive)
         return sv, sv.counts(n)
 
     def warmup(self, requests: Sequence[ServeRequest]) -> None:
@@ -490,12 +549,102 @@ class HeteroRuntime:
         total_kv_wire = 0.0
         total_buckets = {"t_splice_s": 0.0, "t_slot_write_s": 0.0,
                          "t_dispatch_s": 0.0, "t_await_s": 0.0}
-        done = 0
+        total_requeued = 0
+        total_retries = 0
+        total_latched = 0
+        retried_uids: set = set()
+        dead: Dict[int, Backoff] = {}     # topology group index → re-probe
+        group_alive_tel: Dict[str, bool] = {}
+        link_bw: Dict[str, float] = {}
+        queue: List[ServeRequest] = list(requests)
         t_start = time.perf_counter()
-        while done < len(requests):
-            chunk = requests[done:done + wave]
-            done += len(chunk)
-            sv, counts = self._split_for(len(chunk), split)
+        while queue:
+            wave_idx = len(waves_tel)
+            chunk = queue[:wave]
+            queue = queue[wave:]
+
+            # --- fleet fault domain (PR 8) ----------------------------
+            # 1) bounded-backoff re-probe of dead decode groups: a
+            # restored group rejoins on the wave clock, a still-dead
+            # probe doubles the wait (the PrefillRouter's Backoff)
+            for gi, bo in list(dead.items()):
+                if bo.tick():
+                    if self.topology.groups[gi].health.alive:
+                        del dead[gi]
+                    else:
+                        bo.fail()
+
+            # 2) the prefill spoke's NodeGroup health runs on the same
+            # wave clock: a group-level kill (or armed fault firing now)
+            # propagates to its workers so the router latches local this
+            # wave; a group-level restore revives exactly the workers
+            # this path killed, and the router's own backoff re-probes
+            pfg = self.topology.prefill_group
+            if pfg is not None:
+                try:
+                    pfg.health.check("dispatch", pfg.name)
+                except GroupUnavailableError:
+                    pass
+                workers = [spec.prefill_worker
+                           for spec in self.tasks.values()
+                           if spec.prefill_worker is not None]
+                if not pfg.health.alive and not self._pf_group_killed:
+                    for w in workers:
+                        w.kill()
+                    self._pf_group_killed = True
+                elif pfg.health.alive and self._pf_group_killed:
+                    for w in workers:
+                        w.restore()
+                    self._pf_group_killed = False
+
+            # 3) mobility-driven link churn (paper §V-A.5): replay every
+            # traced edge at this wave — live LinkModel, β latch, and the
+            # traced bandwidth the telemetry and hop prices follow
+            latched: Dict[int, bool] = {}
+            wave_links: Dict[int, Tuple[LinkModel, float]] = {}
+            link_bw = {g.name: 0.0 for g in self.topology.groups}
+            for gi in range(1, len(self.topology.groups)):
+                name = self.topology.groups[gi].name
+                tr = self.link_traces.get(gi)
+                if tr is None:
+                    link_bw[name] = float(data_rate(
+                        self.topology.links[gi], self.link_distance))
+                    continue
+                eff = tr.link_at(self.topology.links[gi], wave_idx)
+                d_m = tr.distance_at(wave_idx)
+                feasible = tr.feasible(wave_idx)
+                wave_links[gi] = (eff, d_m)
+                link_bw[name] = float(data_rate(eff, d_m))
+                if gi == self.topology.prefill_spoke:
+                    if self.prefill_router is not None:
+                        self.prefill_router.link = eff
+                        self.prefill_router.distance = d_m
+                        self.prefill_router.mobility_latched = not feasible
+                    for spec in self.tasks.values():
+                        if spec.prefill_worker is not None:
+                            spec.prefill_worker.set_link(eff, d_m)
+                else:
+                    latched[gi] = not feasible
+            n_latched = sum(latched.values()) + (
+                1 if self.prefill_router is not None
+                and self.prefill_router.mobility_latched else 0)
+            total_latched += n_latched
+
+            # 4) surviving simplex: dead groups mask to exactly 0; the β
+            # latch additionally zeroes priced-out edges while at least
+            # one unlatched live group remains (death is hard, the latch
+            # is advisory — an all-latched fleet still has to decode)
+            alive_mask = tuple(gi not in dead for gi in decode)
+            if not any(alive_mask):
+                raise GroupUnavailableError(
+                    "all", "every decode group is dead — restore one "
+                    "before serving")
+            eff_mask = tuple(a and not latched.get(gi, False)
+                             for a, gi in zip(alive_mask, decode))
+            if not any(eff_mask):
+                eff_mask = alive_mask
+            sv, counts = self._split_for(len(chunk), split, eff_mask)
+            counts = list(counts)
 
             route = None
             if self.prefill_router is not None:
@@ -548,6 +697,7 @@ class HeteroRuntime:
             slot_write_s_group = [0.0] * D
             dispatch_s_group = [0.0] * D
             await_s_group = [0.0] * D
+            requeue: List[ServeRequest] = []
             t0 = time.perf_counter()
             for d, gi in enumerate(decode):
                 grp = self.topology.groups[gi]
@@ -557,13 +707,34 @@ class HeteroRuntime:
                     by_task.setdefault(self._task_of(req), []).append(req)
                 tg0 = time.perf_counter()
                 payload = 0.0
-                for task, reqs_t in by_task.items():
-                    spec = self.tasks[task]
-                    outs, st = spec.engines[grp.name].run(
-                        self._capped(spec, reqs_t))
+                # outputs are STAGED until the group's await-side health
+                # check passes: a mid-wave death discards the stage, so a
+                # re-queued request's tokens are only ever emitted once
+                staged: List[Tuple[str, List[RequestOutput], Any]] = []
+                failed = False
+                try:
+                    if share:
+                        grp.health.check("dispatch", grp.name)
+                    for task, reqs_t in by_task.items():
+                        spec = self.tasks[task]
+                        outs, st = spec.engines[grp.name].run(
+                            self._capped(spec, reqs_t))
+                        staged.append((task, outs, st))
+                        payload += len(reqs_t) * spec.payload_bytes_per_item
+                    if share:
+                        grp.health.check("await", grp.name)
+                except GroupUnavailableError:
+                    # the group died mid-wave: its slice re-queues onto
+                    # the survivors and its re-probe clock starts
+                    dead[gi] = Backoff(self.reprobe_after, self.reprobe_max)
+                    requeue.extend(share)
+                    counts[d] = 0
+                    staged = []
+                    by_task = {}
+                    failed = True
+                for task, outs, st in staged:
                     outputs[task].extend(outs)
                     toks_group[d] += sum(len(o.tokens) for o in outs)
-                    payload += len(reqs_t) * spec.payload_bytes_per_item
                     syncs_group[d] += st.host_syncs
                     decode_s_group[d] += st.decode_s
                     dispatches_group[d] += st.macro_dispatches
@@ -583,12 +754,14 @@ class HeteroRuntime:
                     slot_write_s_group[d] += st.t_slot_write_s
                     dispatch_s_group[d] += st.t_dispatch_s
                     await_s_group[d] += st.t_await_s
-                t_group[d] = time.perf_counter() - tg0
-                if gi > 0 and share:
+                t_group[d] = 0.0 if failed else time.perf_counter() - tg0
+                if gi > 0 and share and not failed:
+                    eff_link, eff_dist = wave_links.get(
+                        gi, (self.topology.links[gi], self.link_distance))
                     t_link[d] = float(offload_latency(
-                        self.topology.links[gi], payload, self.link_distance))
+                        eff_link, payload, eff_dist))
                 per_group[grp.name] = {
-                    "n": len(share), "wall_s": t_group[d],
+                    "n": 0 if failed else len(share), "wall_s": t_group[d],
                     "link_s": t_link[d], "tokens": toks_group[d],
                     "host_syncs": syncs_group[d],
                     "t_per_macro_step_s": decode_s_group[d]
@@ -609,6 +782,28 @@ class HeteroRuntime:
                     "t_await_s": await_s_group[d],
                     "tasks": {t: len(r) for t, r in by_task.items()}}
             wall = time.perf_counter() - t0
+            # commit the wave's failures: requests from dead groups go
+            # back to the FRONT of the queue (same serve call, next wave)
+            requeue_uids = {r.uid for r in requeue}
+            wave_retries = sum(1 for r in chunk
+                               if r.uid in retried_uids
+                               and r.uid not in requeue_uids)
+            retried_uids.update(requeue_uids)
+            total_requeued += len(requeue)
+            total_retries += wave_retries
+            queue = requeue + queue
+            alive_after = tuple(gi not in dead for gi in decode)
+            group_alive_tel = {}
+            for gi, g in enumerate(self.topology.groups):
+                if gi == self.topology.prefill_spoke:
+                    # the routing-effective liveness: group health AND
+                    # worker health, as the router saw it this wave
+                    group_alive_tel[g.name] = bool(
+                        self.prefill_router is not None
+                        and self.prefill_router.healthy)
+                else:
+                    group_alive_tel[g.name] = bool(
+                        alive_after[decode.index(gi)])
             total_tokens += sum(toks_group)
             total_syncs += sum(syncs_group)
             total_decode_s += sum(decode_s_group)
@@ -631,7 +826,7 @@ class HeteroRuntime:
 
             rep = OffloadReport(
                 r=sv.r, n_local=counts[0],
-                n_offloaded=len(chunk) - counts[0],
+                n_offloaded=sum(counts[1:]),
                 t_local_s=t_group[0],
                 t_remote_s=max(t_group[1:], default=0.0),
                 t_offload_s=max(t_link[1:], default=0.0),
@@ -654,7 +849,13 @@ class HeteroRuntime:
                 t_splice_s=sum(splice_s_group),
                 t_slot_write_s=sum(slot_write_s_group),
                 t_dispatch_s=sum(dispatch_s_group),
-                t_await_s=sum(await_s_group))
+                t_await_s=sum(await_s_group),
+                group_alive=alive_after,
+                wave_requeued=len(requeue),
+                wave_retries=wave_retries,
+                link_bw_hz=tuple(link_bw[self.topology.groups[gi].name]
+                                 for gi in decode),
+                mobility_latched=n_latched)
             if split is None and self.controller is not None:
                 self.controller.observe(rep)
             if self.prefill_router is not None:
@@ -697,6 +898,11 @@ class HeteroRuntime:
                 "prefill_flops_avoided": sum(favoid_group),
                 "kv_hop_bytes_raw": sum(kv_raw_group),
                 "kv_hop_bytes_wire": sum(kv_wire_group),
+                "group_alive": group_alive_tel,
+                "wave_requeued": len(requeue),
+                "wave_retries": wave_retries,
+                "link_bw_hz": dict(link_bw),
+                "mobility_latched": n_latched,
                 "per_group": per_group})
             if verbose:
                 counts_str = "/".join(str(c) for c in counts)
@@ -743,6 +949,11 @@ class HeteroRuntime:
                 "t_slot_write_s": total_buckets["t_slot_write_s"],
                 "t_dispatch_s": total_buckets["t_dispatch_s"],
                 "t_await_s": total_buckets["t_await_s"],
+                "wave_requeued": total_requeued,
+                "wave_retries": total_retries,
+                "mobility_latched": total_latched,
+                "group_alive": group_alive_tel,
+                "link_bw_hz": dict(link_bw),
                 "final_split": [round(float(f), 4) for f in (
                     self.controller.fractions
                     if split is None and self.controller is not None

@@ -4,7 +4,8 @@
         --requests 16 --max-new 8 [--reduced] [--kv-int8] [--split auto] \
         [--continuous] [--slots 4] [--macro-steps 8] \
         [--no-overlap-admission] [--prefill-group G] \
-        [--topology pair|star] [--nodes N] [--telemetry-json out.json]
+        [--topology pair|star] [--nodes N] [--telemetry-json out.json] \
+        [--link-trace 4,12,28,12,4 [--mobility-beta 10]]
 
 Serves a Poisson request stream.  ``--split auto`` runs the HeteroEdge
 loop: profile a calibration batch, fit, solve for the split, then divide
@@ -110,7 +111,9 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                      link=None, telemetry_path: Optional[str] = None,
                      prefix_cache_blocks: int = 0,
                      prefix_block_size: int = 8, prefill_pool: int = 1,
-                     kv_keep_rate: Optional[float] = None
+                     kv_keep_rate: Optional[float] = None,
+                     link_trace: Optional[str] = None,
+                     mobility_beta: Optional[float] = None
                      ) -> C.ServeResult:
     """Continuous-batching collaborative serving over a request stream,
     through the HeteroRuntime session (pair or star topology).
@@ -127,13 +130,20 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                               kind=topology.kind)
     offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
     max_len = prompt_len + offset + max_new + 8
+    traces = None
+    if link_trace:
+        # one trace broadcast to every spoke edge: LinkTrace is a pure
+        # function of the wave index, so sharing the object is safe
+        tr = C.LinkTrace.from_spec(link_trace, beta=mobility_beta)
+        traces = {gi: tr for gi in range(1, len(topology))}
     runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len,
                               macro_steps=macro_steps,
                               overlap_admission=overlap_admission,
                               prefix_cache_blocks=prefix_cache_blocks,
                               prefix_block_size=prefix_block_size,
                               prefill_pool=prefill_pool,
-                              kv_keep_rate=kv_keep_rate)
+                              kv_keep_rate=kv_keep_rate,
+                              link_traces=traces)
     runtime.add_task(cfg.name, cfg, params,
                      max_new=max_new,
                      payload_bytes_per_item=prompt_len * cfg.d_model * 2)
@@ -164,6 +174,11 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
               f"{tot['prefill_offloaded']} offloaded, "
               f"{tot['t_kv_transfer_s'] * 1e3:.2f}ms kv-transfer, "
               f"{tot['prefill_fallbacks']} fallbacks")
+    if tot.get("wave_requeued") or tot.get("mobility_latched"):
+        print(f"fault domain: {tot['wave_requeued']} re-queued, "
+              f"{tot['wave_retries']} retried, "
+              f"{tot['mobility_latched']} mobility latches, "
+              f"alive={tot['group_alive']}")
     if prefix_cache_blocks > 0:
         print(f"prefix cache[{prefix_cache_blocks}x{prefix_block_size}]: "
               f"{tot['prefix_hits']} hits, "
@@ -227,6 +242,17 @@ def main():
                     help="LOSSY prefill->decode KV-hop compression: keep "
                          "only the top-R salience fraction of shipped tail "
                          "rows (default off = lossless compaction)")
+    ap.add_argument("--link-trace", default=None, metavar="SPEC",
+                    help="mobility trace replayed per serve wave on every "
+                         "spoke edge: comma-separated distances in meters "
+                         '("4,12,28,12,4") or @path to a JSON file with '
+                         "distances/bandwidths arrays (continuous mode); "
+                         "edges whose fitted latency L(d) crosses beta are "
+                         "latched local until the trace re-opens them")
+    ap.add_argument("--mobility-beta", type=float, default=None,
+                    metavar="B",
+                    help="latency threshold beta (s) for the --link-trace "
+                         "stop-offloading latch (default: MobilityModel's)")
     ap.add_argument("--telemetry-json", default=None, metavar="PATH",
                     help="write HeteroRuntime telemetry JSON here")
     args = ap.parse_args()
@@ -251,6 +277,12 @@ def main():
     if args.prefill_pool > 1 and args.prefill_group is None:
         ap.error("--prefill-pool > 1 requires --prefill-group (the pool "
                  "lives on the dedicated prefill spoke)")
+    if (args.link_trace or args.mobility_beta is not None) \
+            and not args.continuous:
+        ap.error("--link-trace/--mobility-beta require --continuous (the "
+                 "trace replays on the HeteroRuntime wave clock)")
+    if args.mobility_beta is not None and not args.link_trace:
+        ap.error("--mobility-beta only applies to a --link-trace")
     topology = build_topology(args.topology, nodes,
                               prefill_group=args.prefill_group)
     P = args.prompt_len
@@ -268,7 +300,9 @@ def main():
                          prefix_cache_blocks=args.prefix_cache_blocks,
                          prefix_block_size=args.prefix_block_size,
                          prefill_pool=args.prefill_pool,
-                         kv_keep_rate=args.kv_keep_rate)
+                         kv_keep_rate=args.kv_keep_rate,
+                         link_trace=args.link_trace,
+                         mobility_beta=args.mobility_beta)
         return
 
     prompts = np.stack([np.pad(r.prompt[:P], (0, max(0, P - len(r.prompt))))

@@ -919,8 +919,9 @@ class ContinuousServingEngine:
         n_offloaded = n_fallbacks = 0
 
         def _worker_error():
+            from repro.core.offload import GroupUnavailableError
             from repro.serving.prefill import PrefillWorkerError
-            return PrefillWorkerError
+            return (PrefillWorkerError, GroupUnavailableError)
 
         def _use_remote() -> bool:
             return (worker is not None and self.prefill_remote

@@ -144,6 +144,14 @@ class PrefillWorker:
         err = PrefillWorkerTimeout if timeout else PrefillWorkerError
         self._fault = (kind, int(after), err)
 
+    def set_link(self, link, distance: Optional[float] = None) -> None:
+        """Follow a mobility trace: future KV hops are priced on the live
+        edge (the runtime updates this per wave from the LinkTrace, so
+        the hop price tracks the traced bandwidth/distance)."""
+        self.link = link
+        if distance is not None:
+            self.distance = float(distance)
+
     def _check(self, kind: str) -> None:
         if not self.healthy:
             raise PrefillWorkerError(
@@ -308,6 +316,14 @@ class PrefillWorkerPool:
                      timeout: bool = False, worker: int = 0) -> None:
         """Arm a one-shot fault on ONE member (default the first)."""
         self.workers[worker].inject_fault(kind, after=after, timeout=timeout)
+
+    def set_link(self, link, distance: Optional[float] = None) -> None:
+        """Broadcast a live-link update to every member."""
+        self.link = link
+        if distance is not None:
+            self.distance = float(distance)
+        for w in self.workers:
+            w.set_link(link, distance)
 
     # -- hot path -------------------------------------------------------
     def dispatch(self, batch) -> Tuple[Any, Any]:

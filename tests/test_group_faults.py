@@ -1,0 +1,430 @@
+"""Chaos tier: ANY node group can die, wedge or churn mid-serve (PR 8).
+
+PR 5's fault surface only covered the dedicated prefill group.  A real
+fleet loses decode spokes and hub arms too — node crash, partition,
+rolling restart — and mobility (paper §V-A.5) prices edges in and out
+continuously.  These tests arm the fleet-wide ``NodeGroup.health`` chaos
+surface to kill every group (hub arm, decode spoke, prefill spoke) at
+every wave stage and assert the recovery contract:
+
+* the serve call COMPLETES — requests sliced to a dead group re-queue
+  onto the surviving groups within the same call, each exactly once;
+* token streams stay BIT-IDENTICAL to the all-healthy ``macro_steps=0``
+  per-step reference (placement moves, tokens never do), across every
+  cache family;
+* telemetry records the re-route (``group_alive`` / ``wave_requeued`` /
+  ``wave_retries``), a restored group re-probes and rejoins within the
+  bounded-backoff window, and the β-threshold mobility latch forces an
+  edge local within one wave and re-opens it when the trace recovers.
+
+Marked ``slow``: CI runs this file in the chaos job; the fast job
+excludes it via ``-m "not slow"``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.configs.base import get_config, reduced
+from repro.models import model as M
+from repro.serving.engine import ContinuousServingEngine, ServeRequest
+
+pytestmark = pytest.mark.slow
+
+SLOTS = 2
+MAX_LEN = 48
+PROMPT = 8
+MAX_NEWS = [1, 6, 3, 1, 7, 4, 2, 5]   # churny: singles + mixed lengths
+
+
+def _requests(cfg, n=len(MAX_NEWS), seed=0):
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (n, PROMPT)).astype(np.int32)
+    frontend = None
+    if cfg.frontend:
+        frontend = rng.standard_normal(
+            (n, cfg.frontend_tokens, cfg.frontend_dim or cfg.d_model)
+        ).astype(np.float32)
+    return [ServeRequest(uid=i, prompt=prompts[i],
+                         max_new=MAX_NEWS[i % len(MAX_NEWS)],
+                         frontend=None if frontend is None else frontend[i],
+                         task=cfg.name)
+            for i in range(n)]
+
+
+def _ref_streams(cfg, params, reqs):
+    """The all-healthy ``macro_steps=0`` per-step reference streams."""
+    base = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                   macro_steps=0)
+    outs, _ = base.run([dataclasses.replace(r, task="") for r in reqs])
+    return {o.uid: o.tokens for o in outs}
+
+
+def _star():
+    """Fresh star (fresh GroupHealth per test): hub 'pri', decode spoke
+    'aux', dedicated prefill spoke 'pf', all sharing the host device."""
+    dev = jax.devices()[0]
+    return C.Topology.star(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           [C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                            C.NodeGroup("pf", [dev], C.JETSON_XAVIER)],
+                           C.ICI_LINK, prefill_spoke="pf")
+
+
+def _assert_streams(res, cfg, want):
+    got = {o.uid: o.tokens for o in res.outputs[cfg.name]}
+    assert sorted(got) == sorted(want)          # every uid EXACTLY once
+    for uid in want:
+        np.testing.assert_array_equal(want[uid], got[uid])
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(cfg)
+    return cfg, params, reqs, _ref_streams(cfg, params, reqs)
+
+
+# ---------------------------------------------------------------------------
+# kill ANY group at ANY wave stage: serve completes, streams identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("victim", ["pri", "aux", "pf"])
+@pytest.mark.parametrize("after", [0, 2])
+def test_kill_any_group_completes_bit_identical(served, victim, after):
+    """The acceptance matrix: every group × (first | later) wave-stage
+    kill.  Decode victims re-queue their slice onto survivors; the
+    prefill victim latches the router local.  All uids complete exactly
+    once with per-step-reference streams, and telemetry shows the
+    re-route."""
+    cfg, params, reqs, want = served
+    star = _star()
+    vi = [g.name for g in star.groups].index(victim)
+    star.groups[vi].inject_fault("dispatch", after=after)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    rt.add_task(cfg.name, cfg, params)
+    res = rt.serve(reqs, split=0.5, wave=2, warm=False)
+    _assert_streams(res, cfg, want)
+    assert not star.groups[vi].alive
+    tot = res.telemetry["totals"]
+    assert tot["group_alive"][victim] is False
+    for name in set(tot["group_alive"]) - {victim}:
+        assert tot["group_alive"][name] is True
+    if victim == "pf":
+        # prefill victim: no decode slice to re-queue — the router flips
+        routes = [w["prefill_route"] for w in res.telemetry["waves"]]
+        assert routes[-1] == "local", routes
+        assert tot["wave_requeued"] == 0
+    else:
+        # the dead group's slice re-queued and completed on survivors
+        assert tot["wave_requeued"] >= 1
+        assert tot["wave_retries"] >= 1
+        dead_from = [w["wave"] for w in res.telemetry["waves"]
+                     if not w["group_alive"][victim]]
+        assert dead_from, res.telemetry["waves"]
+        for w in res.telemetry["waves"][dead_from[0]:]:
+            assert w["per_group"][victim]["n"] == 0
+
+
+def test_kill_at_await_discards_uncommitted_outputs(served):
+    """An await-stage death lands AFTER the group's engines ran: the
+    staged outputs must be discarded (never emitted), the slice
+    re-queued — one copy of every token, bit-identical."""
+    cfg, params, reqs, want = served
+    star = _star()
+    star.groups[1].inject_fault("await", after=1)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    rt.add_task(cfg.name, cfg, params)
+    res = rt.serve(reqs, split=0.5, wave=2, warm=False)
+    _assert_streams(res, cfg, want)
+    tot = res.telemetry["totals"]
+    assert tot["wave_requeued"] >= 1 and tot["wave_retries"] >= 1
+    assert tot["group_alive"]["aux"] is False
+
+
+def test_all_decode_groups_dead_raises_typed(served):
+    """With every decode group dead the wave has nowhere to go: serve
+    must fail LOUDLY with the typed error, not hang or spin."""
+    cfg, params, reqs, _ = served
+    star = _star()
+    star.groups[0].kill()
+    star.groups[1].kill()
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    rt.add_task(cfg.name, cfg, params)
+    with pytest.raises(C.GroupUnavailableError):
+        rt.serve(reqs, split=0.5, wave=2, warm=False)
+
+
+# ---------------------------------------------------------------------------
+# restore + rejoin on the bounded-backoff wave clock
+# ---------------------------------------------------------------------------
+class _RebootingHealth(C.GroupHealth):
+    """Chaos helper: while down, liveness reads fail ``probes_down``
+    times, then the node has 'rebooted' and reads True — the runtime's
+    re-probe clock is what spaces those reads out."""
+
+    def __init__(self, probes_down: int = 1):
+        self._probes_down = int(probes_down)
+        super().__init__()
+
+    @property
+    def alive(self) -> bool:
+        if not self._alive and self._probes_down > 0:
+            self._probes_down -= 1
+            if self._probes_down == 0:
+                self._alive = True
+        return self._alive
+
+    @alive.setter
+    def alive(self, v: bool) -> None:
+        self._alive = bool(v)
+
+
+def test_restored_decode_group_rejoins_within_backoff_bound(served):
+    """A decode spoke dies mid-serve and comes back: the per-group
+    Backoff re-probes it on the wave clock and it rejoins WITHIN THE
+    SAME serve call — visible as group_alive flipping back and fresh
+    work landing on it — with streams still bit-identical."""
+    cfg, params, _, _ = served
+    reqs = _requests(cfg, n=16)
+    want = _ref_streams(cfg, params, reqs)
+    star = _star()
+    star.groups[1].health = _RebootingHealth(probes_down=1)
+    star.groups[1].inject_fault("dispatch", after=1)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         reprobe_after=2, reprobe_max=4)
+    rt.add_task(cfg.name, cfg, params)
+    res = rt.serve(reqs, split=0.5, wave=2, warm=False)
+    _assert_streams(res, cfg, want)
+    alive_by_wave = [w["group_alive"]["aux"] for w in res.telemetry["waves"]]
+    died = alive_by_wave.index(False)
+    rejoined = died + alive_by_wave[died:].index(True)
+    # first probe fires reprobe_after waves after the death wave
+    assert rejoined - died <= rt.reprobe_after + 1, alive_by_wave
+    assert res.telemetry["totals"]["group_alive"]["aux"] is True
+    # the rejoined group takes real work again
+    assert any(w["per_group"]["aux"]["n"] > 0
+               for w in res.telemetry["waves"][rejoined:]), alive_by_wave
+    assert res.telemetry["totals"]["wave_requeued"] >= 1
+
+
+def test_killed_prefill_group_restores_and_reroutes(served):
+    """Group-level kill/restore of the prefill spoke propagates to its
+    workers both ways: the router latches local, then auto-revives off
+    its own backoff once the GROUP (not the worker) is restored."""
+    from repro.core.scheduler import PrefillRouter
+    cfg, params, reqs, want = served
+    star = _star()
+    router = PrefillRouter(star.prefill_link, reprobe_after=1,
+                           reprobe_max=2, margin=1e9)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         prefill_router=router)
+    spec = rt.add_task(cfg.name, cfg, params)
+
+    star.groups[2].kill()
+    res1 = rt.serve(reqs, split=0.5, wave=2, warm=False)
+    _assert_streams(res1, cfg, want)
+    assert not spec.prefill_worker.healthy      # kill propagated
+    assert all(w["prefill_route"] == "local"
+               for w in res1.telemetry["waves"])
+    assert res1.telemetry["totals"]["group_alive"]["pf"] is False
+
+    star.groups[2].restore()                    # node reboots
+    res2 = rt.serve(reqs, split=0.5, wave=2, warm=False)
+    _assert_streams(res2, cfg, want)
+    assert spec.prefill_worker.healthy          # restore propagated
+    assert res2.telemetry["totals"]["group_alive"]["pf"] is True
+    assert res2.telemetry["waves"][-1]["prefill_route"] == "remote"
+    assert res2.telemetry["totals"]["prefill_offloaded"] > 0
+
+
+# ---------------------------------------------------------------------------
+# mobility-driven link churn: the β latch on live serve waves
+# ---------------------------------------------------------------------------
+def test_mobility_latch_forces_local_within_one_wave_and_reopens(served):
+    """Paper §V-A.5 on the wave clock: the wave the traced latency
+    crosses β the decode edge takes ZERO items (forced local); the wave
+    the trace drops back below β it takes work again.  Streams stay
+    bit-identical — the latch moves placement, never tokens."""
+    cfg, params, _, _ = served
+    reqs = _requests(cfg, n=16)
+    want = _ref_streams(cfg, params, reqs)
+    star = _star()
+    # waves 1-2 price out (L(30m) > β=10s on the default curve)
+    trace = C.LinkTrace(distances=(4.0, 30.0, 30.0, 4.0))
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         link_traces={"aux": trace})
+    rt.add_task(cfg.name, cfg, params)
+    res = rt.serve(reqs, split=0.5, wave=4, warm=False)
+    _assert_streams(res, cfg, want)
+    waves = res.telemetry["waves"]
+    assert waves[0]["per_group"]["aux"]["n"] > 0
+    assert waves[0]["mobility_latched"] == 0
+    for w in waves[1:3]:
+        assert w["per_group"]["aux"]["n"] == 0, waves   # within ONE wave
+        assert w["mobility_latched"] == 1
+        assert w["group_alive"]["aux"] is True          # latched ≠ dead
+    assert waves[3]["per_group"]["aux"]["n"] > 0        # re-opened
+    assert waves[3]["mobility_latched"] == 0
+    # the traced bandwidth the hop prices follow: derated past β
+    assert waves[1]["link_bw_hz"]["aux"] < waves[0]["link_bw_hz"]["aux"]
+    assert res.telemetry["totals"]["mobility_latched"] == 2
+
+
+def test_mobility_latch_on_prefill_edge_flips_router(served):
+    """A traced prefill edge past β forces the ROUTE local for exactly
+    the latched waves — and back, with no health churn involved."""
+    from repro.core.scheduler import PrefillRouter
+    cfg, params, _, _ = served
+    reqs = _requests(cfg, n=16)
+    want = _ref_streams(cfg, params, reqs)
+    star = _star()
+    trace = C.LinkTrace(distances=(4.0, 30.0, 4.0, 4.0))
+    router = PrefillRouter(star.prefill_link, margin=1e9)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         prefill_router=router, link_traces={"pf": trace})
+    rt.add_task(cfg.name, cfg, params)
+    res = rt.serve(reqs, split=0.5, wave=4, warm=False)
+    _assert_streams(res, cfg, want)
+    routes = [w["prefill_route"] for w in res.telemetry["waves"]]
+    assert routes[0] == "remote", routes
+    assert routes[1] == "local", routes
+    assert "remote" in routes[2:], routes
+    assert res.telemetry["waves"][1]["mobility_latched"] == 1
+    assert rt.prefill_router.healthy            # a latch is not a death
+
+
+def test_all_latched_still_serves(served):
+    """The latch is advisory: when EVERY live decode edge prices out the
+    fleet still has to decode — the mask falls back to plain liveness
+    instead of starving the wave."""
+    cfg, params, reqs, want = served
+    star = _star()
+    trace = C.LinkTrace(distances=(30.0,))      # priced out forever
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4,
+                         link_traces={"aux": trace})
+    rt.add_task(cfg.name, cfg, params)
+    star.groups[0].kill()                       # hub dead, aux latched
+    res = rt.serve(reqs, split=0.5, wave=4, warm=False)
+    _assert_streams(res, cfg, want)
+    # wave 0 discovers the hub's death at dispatch and re-queues; every
+    # wave after that routes through the latched-but-live aux edge
+    assert res.telemetry["totals"]["wave_requeued"] >= 1
+    assert all(w["per_group"]["aux"]["n"] > 0
+               for w in res.telemetry["waves"][1:])
+
+
+# ---------------------------------------------------------------------------
+# OffloadEngine: typed dispatch/await faults + the per-group await timeout
+# ---------------------------------------------------------------------------
+def _pair():
+    dev = jax.devices()[0]
+    return C.Topology.pair(C.NodeGroup("pri", [dev], C.JETSON_NANO),
+                           C.NodeGroup("aux", [dev], C.JETSON_XAVIER),
+                           C.ICI_LINK)
+
+
+def _sum_engine(topo, **kw):
+    return C.OffloadEngine(lambda b: {"y": jnp.sum(b["x"], axis=-1)},
+                           topology=topo, payload_bytes_per_item=8.0, **kw)
+
+
+BATCH = {"x": np.ones((8, 4), np.float32)}
+
+
+def test_offload_engine_dispatch_fault_is_typed():
+    """A dead arm fails the run at LAUNCH time with the group named —
+    before anything is dispatched that could hang."""
+    topo = _pair()
+    topo.groups[1].inject_fault("dispatch", after=0)
+    eng = _sum_engine(topo)
+    with pytest.raises(C.GroupUnavailableError) as ei:
+        eng.run(BATCH, 0.5)
+    assert ei.value.group == "aux"
+    assert not topo.groups[1].alive
+    # restore() clears the fault: the same engine serves again
+    topo.groups[1].restore()
+    rep = eng.run(BATCH, 0.5)
+    assert rep.n_offloaded == 4
+
+
+def test_offload_engine_await_fault_is_typed():
+    """The await-stage fault fires AFTER every group launched — the
+    separate failure mode a dispatch-time check can't cover."""
+    topo = _pair()
+    topo.groups[1].inject_fault("await", after=0)
+    eng = _sum_engine(topo)
+    with pytest.raises(C.GroupUnavailableError) as ei:
+        eng.run(BATCH, 0.5)
+    assert ei.value.group == "aux"
+
+
+def test_offload_engine_wedged_group_times_out():
+    """A wedged arm (alive but never completing) is surfaced by the
+    per-group await timeout as the TIMEOUT subclass, and the group is
+    marked dead for the next wave."""
+    topo = _pair()
+    topo.groups[1].health.wedge()
+    eng = _sum_engine(topo, group_timeout_s=0.2)
+    with pytest.raises(C.GroupTimeoutError):
+        eng.run(BATCH, 0.5)
+    assert not topo.groups[1].alive
+
+
+def test_offload_engine_wedge_without_timeout_refuses_to_hang():
+    """With no timeout configured a wedge must still raise (typed, not
+    a hang): awaiting it forever would freeze the host loop."""
+    topo = _pair()
+    topo.groups[1].health.wedge()
+    eng = _sum_engine(topo)
+    with pytest.raises(C.GroupUnavailableError, match="refusing to hang"):
+        eng.run(BATCH, 0.5)
+
+
+def test_offload_engine_dead_arm_with_zero_share_is_skipped():
+    """A dead group that the split already routes around must not fail
+    the run — health is only checked where work is actually sent."""
+    topo = _pair()
+    topo.groups[1].kill()
+    eng = _sum_engine(topo)
+    rep = eng.run(BATCH, 0.0)                   # everything on the hub
+    assert rep.n_local == 8 and rep.n_offloaded == 0
+    np.testing.assert_allclose(np.asarray(rep.outputs["y"]), 4.0)
+
+
+def test_offload_engine_timeout_validation():
+    with pytest.raises(ValueError, match="group_timeout_s"):
+        _sum_engine(_pair(), group_timeout_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# recovered streams stay bit-identical for EVERY cache family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,kv_int8", [
+    ("llama3.2-1b", False),       # transformer KV cache
+    ("falcon-mamba-7b", False),   # SSM conv + state caches
+    ("zamba2-2.7b", False),       # hybrid: mamba backbone + shared attn KV
+    ("internvl2-1b", True),       # vlm frontend offset + int8-quantized KV
+])
+def test_recovery_bit_identical_per_family(arch, kv_int8):
+    """Mid-serve spoke death + re-queue, per cache family: splicing a
+    re-queued request into another group's slots must reproduce the
+    per-step reference stream exactly — donation, int8 K/V scales and
+    SSM state layouts included."""
+    cfg = reduced(get_config(arch))
+    if kv_int8:
+        cfg = dataclasses.replace(cfg, kv_quant="int8")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = _requests(cfg, n=6, seed=7)
+    want = _ref_streams(cfg, params, reqs)
+    star = _star()
+    star.groups[1].inject_fault("dispatch", after=1)
+    rt = C.HeteroRuntime(star, slots=SLOTS, max_len=MAX_LEN, macro_steps=4)
+    rt.add_task(cfg.name, cfg, params)
+    res = rt.serve(reqs, split=0.5, wave=2, warm=False)
+    _assert_streams(res, cfg, want)
+    assert res.telemetry["totals"]["wave_requeued"] >= 1
+    assert res.telemetry["totals"]["group_alive"]["aux"] is False

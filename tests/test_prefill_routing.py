@@ -295,3 +295,115 @@ def test_maybe_revive_noop_while_healthy():
     for _ in range(5):
         assert not r.maybe_revive(group_alive=True)
     assert r.healthy and r._down_waves == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet fault domain: surviving-simplex masking + shared backoff (PR 8)
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(n_groups=st.integers(2, 6), seed=st.integers(0, 10**6),
+       kill_bits=st.integers(0, 2**6 - 1), n=st.integers(0, 48))
+def test_masked_split_vector_keeps_simplex_invariants(n_groups, seed,
+                                                      kill_bits, n,
+                                                      test_seed):
+    """Masking dead groups out of a random SplitVector must land back on
+    the simplex: fractions non-negative and summing to one, dead groups
+    at EXACTLY zero — and apportioned counts never send a dead group
+    work.  An all-dead mask raises instead of dividing by zero."""
+    rng = np.random.default_rng(test_seed + seed)
+    sv = C.SplitVector(tuple(rng.uniform(0.0, 1.0, n_groups)))
+    alive = tuple(bool((kill_bits >> g) & 1) for g in range(n_groups))
+    if not any(alive):
+        with pytest.raises(C.GroupUnavailableError):
+            sv.masked(alive)
+        return
+    m = sv.masked(alive)
+    f = np.asarray(m.fractions)
+    assert np.all(f >= 0.0), f
+    assert abs(float(f.sum()) - 1.0) < 1e-9, f
+    for g, a in enumerate(alive):
+        if not a:
+            assert m.fractions[g] == 0.0, (g, m.fractions)
+    counts = m.counts(n)
+    assert sum(counts) == n
+    for g, a in enumerate(alive):
+        if not a:
+            assert counts[g] == 0, (g, counts, m.fractions)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_groups=st.integers(2, 5), seed=st.integers(0, 10**6),
+       kill_bits=st.integers(0, 2**5 - 1), n=st.integers(0, 48))
+def test_controller_masks_dead_groups_to_zero(n_groups, seed, kill_bits, n,
+                                              test_seed):
+    """set_alive projects the live controller split onto the surviving
+    simplex: random kill sets over random star timings leave fractions
+    valid, dead groups at exactly 0 items, and every SURVIVOR keeps at
+    least one item when the wave allows (the exploration floor only
+    spans live groups)."""
+    rng = np.random.default_rng(test_seed + seed)
+    ctl = SplitRatioController(ControllerConfig(update_every=2),
+                               n_groups=n_groups)
+    for _ in range(4):     # move the solve off its uniform init
+        n_group = rng.integers(1, 9, n_groups).tolist()
+        rates = rng.uniform(1e-3, 4.0, n_groups)
+        links = np.concatenate([[0.0], rng.uniform(0.0, 1.0, n_groups - 1)])
+        t_group = [float(r * c) for r, c in zip(rates, n_group)]
+        t_link = [float(l * c) for l, c in zip(links, n_group)]
+        ctl.observe(_report(n_group, t_group, t_link))
+    alive = [bool((kill_bits >> g) & 1) for g in range(n_groups)]
+    if not any(alive):
+        with pytest.raises(ValueError):
+            ctl.set_alive(alive)
+        return
+    ctl.set_alive(alive)
+    f = np.asarray(ctl.fractions)
+    assert np.all(f >= -1e-12), f
+    assert abs(float(f.sum()) - 1.0) < 1e-6, f
+    for g, a in enumerate(alive):
+        if not a:
+            assert f[g] == 0.0, (g, f)
+    counts = ctl.split_counts(n)
+    assert sum(counts) == n
+    for g, a in enumerate(alive):
+        if not a:
+            assert counts[g] == 0, (g, counts)
+    if n >= sum(alive):
+        assert all(counts[g] >= 1 for g, a in enumerate(alive) if a), counts
+
+
+def test_backoff_helper_contract():
+    """The factored-out Backoff reproduces the router's historical probe
+    schedule (first probe at `after`, doubling gaps capped at `maximum`)
+    and validates its bounds."""
+    bo = C.Backoff(after=2, maximum=8)
+    fired = []
+    for wave in range(1, 31):
+        if bo.tick():
+            fired.append(wave)
+            bo.fail()
+    assert fired[0] == 2
+    gaps = [b - a for a, b in zip(fired, fired[1:])]
+    assert gaps == [4, 8, 8, 8], (fired, gaps)
+    bo.reset()
+    assert bo.next_probe == 2 and bo.waves == 0
+    cfg_bo = C.Backoff.from_config(C.SchedulerConfig())
+    assert cfg_bo.after == 2 and cfg_bo.maximum == 32
+    with pytest.raises(ValueError):
+        C.Backoff(after=0)
+    with pytest.raises(ValueError):
+        C.Backoff(after=4, maximum=2)
+
+
+def test_mobility_latch_forces_local_and_reopens():
+    """The β latch (paper §V-A.5) overrides a profitable remote price —
+    and routing returns to the plain comparison the wave it clears."""
+    router = PrefillRouter(C.ICI_LINK)
+    router.observe(local_s=2.0, n_local=1)
+    router.observe(remote_s=0.1, n_remote=1, transfer_s=0.0)
+    assert router.route().remote
+    router.mobility_latched = True
+    dec = router.route()
+    assert not dec.remote and dec.reason.startswith("mobility")
+    router.mobility_latched = False
+    assert router.route().remote

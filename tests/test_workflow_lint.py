@@ -110,9 +110,10 @@ def test_bench_matrix_covers_every_gate():
     bench = doc["jobs"]["bench"]
     entries = bench["strategy"]["matrix"]["include"]
     gates = {e["gate"] for e in entries}
-    assert gates == {"fused-decode", "overlap", "prefill", "prefix"}, gates
+    assert gates == {"fused-decode", "overlap", "prefill", "prefix",
+                     "faults"}, gates
     by_gate = {e["gate"]: e["args"] for e in entries}
-    for gate in ("overlap", "prefill", "prefix"):
+    for gate in ("overlap", "prefill", "prefix", "faults"):
         assert by_gate[gate] == f"--only {gate}", by_gate[gate]
     assert "--json" in by_gate["fused-decode"]
 
