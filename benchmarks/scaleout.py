@@ -23,12 +23,18 @@ all-gather/reduce-scatter bytes per dispatch.
 
 Gates (see README "Scale-out harness"):
   per count      bit_identity, stalls_zero, buckets_sum, all_offloaded,
-                 offload_parallel
+                 offload_parallel, wave_bit_identity (the wave_steps=2
+                 driver's streams match the per-step reference)
   trajectory     splice_subline  — splice collective bytes grow
                                    SUB-linearly in device count,
                  macro_envelope  — per-macro-step wall at the largest
                                    count within an envelope of the
-                                   smallest count's
+                                   smallest count's,
+                 dispatch        — t_dispatch_s at the largest count
+                                   within DISPATCH_REL x the smallest
+                                   count's (device-resident state: the
+                                   host launch cost must not scale with
+                                   the mesh)
 
 Usage:
   PYTHONPATH=src:. python benchmarks/scaleout.py --devices 8,32,64 \
@@ -61,8 +67,20 @@ OFFLOAD_GROUPS = 4
 # envelope for the per-macro-step wall at the largest count, as a
 # multiple of the smallest count's (emulated devices share the same host
 # cores, so device execution serializes ~linearly; the gate catches
-# super-linear blowups — program-cache thrash, GSPMD regathers)
-ENVELOPE_REL = float(os.environ.get("SCALEOUT_ENVELOPE", "25.0"))
+# super-linear blowups — program-cache thrash, GSPMD regathers).
+# Tightened 25x -> 10x once the device-resident decode state removed the
+# per-dispatch host re-upload/re-shard tax.
+ENVELOPE_REL = float(os.environ.get("SCALEOUT_ENVELOPE", "10.0"))
+# ceiling for host dispatch-cost growth across the sweep: with carried
+# state device-resident, launching the fused loop is O(args), not
+# O(devices) — t_dispatch_s at the largest count must stay within this
+# multiple of the smallest count's.  The floor keeps the ratio honest
+# now that dispatch totals sit in single-digit milliseconds (down from
+# 1.7s at 64 devices): below it, the growth is host-scheduler jitter,
+# not a scaling tax — the gate exists to catch the O(seconds)
+# re-upload/re-shard regression coming back
+DISPATCH_REL = float(os.environ.get("SCALEOUT_DISPATCH", "3.0"))
+DISPATCH_FLOOR_S = float(os.environ.get("SCALEOUT_DISPATCH_FLOOR", "0.05"))
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +149,7 @@ def emulated_worker(n_devices: int) -> dict:
             "admission_stalls": int(st.admission_stalls),
             "host_syncs": int(st.host_syncs),
             "macro_dispatches": int(st.macro_dispatches),
+            "wave_launches": int(st.wave_launches),
             "wall_s": float(wall),
             "prefill_s": float(st.prefill_s),
             "decode_s": float(st.decode_s),
@@ -150,6 +169,27 @@ def emulated_worker(n_devices: int) -> dict:
         # macro-step / splice / slot write / prefill at this device count
         record["profile"] = profile_engine_programs(eng, prompt_len=PROMPT,
                                                     n_blocks=2)
+
+        # wave arm: same stack, wave_steps=2 — two fused macro-steps per
+        # host launch, sharing every compiled program with the main arm
+        weng = ContinuousServingEngine(cfg, params, slots=SLOTS,
+                                       max_len=MAX_LEN,
+                                       macro_steps=MACRO_K, wave_steps=2,
+                                       prefill_worker=worker,
+                                       share_from=eng)
+        weng.run(reqs[:SLOTS])           # warm the wave program
+        wouts, wst = weng.run(reqs)
+        record["engine_wave"] = {
+            "bit_identity": bool(all(np.array_equal(a.tokens, b.tokens)
+                                     for a, b in zip(ref, wouts))),
+            "wave_steps": 2,
+            "wave_launches": int(wst.wave_launches),
+            "macro_dispatches": int(wst.macro_dispatches),
+            "host_syncs": int(wst.host_syncs),
+            "t_dispatch_s": float(wst.t_dispatch_s),
+            "t_await_s": float(wst.t_await_s),
+            "decode_s": float(wst.decode_s),
+        }
 
     # --- N-group OffloadEngine dispatch across device partitions --------
     devs = jax.devices()
@@ -192,14 +232,25 @@ def run_count(n: int) -> dict:
     env["PYTHONPATH"] = os.pathsep.join(
         p for p in [os.path.join(root, "src"), root,
                     env.get("PYTHONPATH", "")] if p)
-    proc = subprocess.run(
-        [sys.executable, os.path.abspath(__file__),
-         "--emulated-worker", str(n)],
-        env=env, capture_output=True, text=True, timeout=1800)
-    if proc.returncode != 0:
-        raise RuntimeError(
-            f"scaleout worker at {n} devices failed:\n{proc.stderr[-4000:]}")
-    return json.loads(proc.stdout.strip().splitlines()[-1])
+    for attempt in (1, 2):
+        try:
+            proc = subprocess.run(
+                [sys.executable, os.path.abspath(__file__),
+                 "--emulated-worker", str(n)],
+                env=env, capture_output=True, text=True, timeout=1800)
+        except subprocess.TimeoutExpired:
+            # wide emulated meshes have (rarely) wedged in XLA's
+            # in-process runtime; one clean retry beats failing the job
+            if attempt == 2:
+                raise
+            print(f"[scaleout] worker at {n} devices timed out; "
+                  "retrying once", file=sys.stderr)
+            continue
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"scaleout worker at {n} devices failed:"
+                f"\n{proc.stderr[-4000:]}")
+        return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
 def _splice_coll(rec: dict) -> float:
@@ -234,6 +285,15 @@ def evaluate_gates(records) -> dict:
         gates[f"offload_parallel{tag}"] = {
             "pass": rec["offload"]["t_parallel_s"] > 0.0,
             "t_parallel_s": rec["offload"]["t_parallel_s"]}
+        if "engine_wave" in rec:
+            w = rec["engine_wave"]
+            gates[f"wave_bit_identity{tag}"] = {
+                "pass": bool(w["bit_identity"])
+                and w["macro_dispatches"]
+                == w["wave_launches"] * w["wave_steps"],
+                "detail": "wave_steps=2 streams == per-step reference",
+                "wave_launches": w["wave_launches"],
+                "macro_dispatches": w["macro_dispatches"]}
 
     if len(records) >= 2:
         recs = sorted(records, key=lambda r: r["devices"])
@@ -256,6 +316,19 @@ def evaluate_gates(records) -> dict:
             "pass": t_hi <= ENVELOPE_REL * max(t_lo, 1e-9),
             "t_per_macro_step_s": [t_lo, t_hi],
             "growth": t_hi / max(t_lo, 1e-9), "budget": ENVELOPE_REL}
+        d_lo = lo["engine"]["t_dispatch_s"]
+        d_hi = hi["engine"]["t_dispatch_s"]
+        gates["dispatch"] = {
+            # device-resident carried state: launching the fused loop
+            # hands over buffer references, so the host dispatch cost
+            # must not scale with the mesh size (floored — see
+            # DISPATCH_FLOOR_S)
+            "pass": d_hi <= DISPATCH_REL * max(d_lo, DISPATCH_FLOOR_S),
+            "t_dispatch_s": [d_lo, d_hi],
+            "dispatch_frac_of_decode":
+                d_hi / max(hi["engine"]["decode_s"], 1e-9),
+            "growth": d_hi / max(d_lo, 1e-9), "budget": DISPATCH_REL,
+            "floor_s": DISPATCH_FLOOR_S}
     return gates
 
 

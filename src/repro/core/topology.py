@@ -272,6 +272,7 @@ class HeteroRuntime:
 
     def __init__(self, topology: Topology, *, slots: int = 4,
                  max_len: int = 64, macro_steps: int = 8,
+                 wave_steps: int = 1,
                  overlap_admission: bool = True,
                  controller: Optional[SplitRatioController] = None,
                  prefill_router: Optional[PrefillRouter] = None,
@@ -287,6 +288,9 @@ class HeteroRuntime:
         self.max_len = max_len
         self.macro_steps = macro_steps   # fused decode tokens per dispatch
                                          # (0 = pre-fusion per-token loop)
+        self.wave_steps = int(wave_steps)  # fused macro-steps per host
+                                           # launch (>1 = jitted wave
+                                           # driver; needs macro_steps>0)
         self.overlap_admission = bool(overlap_admission)
         # shadow-slot speculative prefill behind the fused decode loop
         # (ignored on the macro_steps=0 per-token path)
@@ -412,6 +416,7 @@ class HeteroRuntime:
             eng = ContinuousServingEngine(cfg, params, slots=self.slots,
                                           max_len=ml,
                                           macro_steps=self.macro_steps,
+                                          wave_steps=self.wave_steps,
                                           overlap_admission=overlap,
                                           prefill_worker=worker,
                                           prefix_cache=pcache,
@@ -536,6 +541,7 @@ class HeteroRuntime:
         total_syncs = 0
         total_decode_s = 0.0
         total_dispatches = 0
+        total_wave_launches = 0
         total_stalls = 0
         total_overlap_s = 0.0
         total_offloaded = 0
@@ -681,6 +687,7 @@ class HeteroRuntime:
             syncs_group = [0] * D
             decode_s_group = [0.0] * D
             dispatches_group = [0] * D
+            launches_group = [0] * D
             stalls_group = [0] * D
             overlap_s_group = [0.0] * D
             offloaded_group = [0] * D
@@ -738,6 +745,7 @@ class HeteroRuntime:
                     syncs_group[d] += st.host_syncs
                     decode_s_group[d] += st.decode_s
                     dispatches_group[d] += st.macro_dispatches
+                    launches_group[d] += st.wave_launches
                     stalls_group[d] += st.admission_stalls
                     overlap_s_group[d] += st.t_prefill_overlap_s
                     offloaded_group[d] += st.prefill_offloaded
@@ -764,6 +772,7 @@ class HeteroRuntime:
                     "n": 0 if failed else len(share), "wall_s": t_group[d],
                     "link_s": t_link[d], "tokens": toks_group[d],
                     "host_syncs": syncs_group[d],
+                    "wave_launches": launches_group[d],
                     "t_per_macro_step_s": decode_s_group[d]
                     / dispatches_group[d] if dispatches_group[d] else 0.0,
                     "t_prefill_overlap_s": overlap_s_group[d],
@@ -808,6 +817,7 @@ class HeteroRuntime:
             total_syncs += sum(syncs_group)
             total_decode_s += sum(decode_s_group)
             total_dispatches += sum(dispatches_group)
+            total_wave_launches += sum(launches_group)
             total_stalls += sum(stalls_group)
             total_overlap_s += sum(overlap_s_group)
             total_offloaded += sum(offloaded_group)
@@ -921,6 +931,7 @@ class HeteroRuntime:
             "prefill_group": pg.name if pg is not None else "",
             "slots": self.slots,
             "macro_steps": self.macro_steps,
+            "wave_steps": self.wave_steps,
             "overlap_admission": self.overlap_admission,
             "tasks": sorted(self.tasks),
             "waves": waves_tel,
@@ -930,6 +941,7 @@ class HeteroRuntime:
                 "tok_per_s": total_tokens / max(wall_total, 1e-9),
                 "host_syncs": total_syncs,
                 "host_syncs_per_token": total_syncs / max(total_tokens, 1),
+                "wave_launches": total_wave_launches,
                 "t_per_macro_step_s": total_decode_s / total_dispatches
                 if total_dispatches else 0.0,
                 "t_prefill_overlap_s": total_overlap_s,

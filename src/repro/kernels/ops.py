@@ -54,20 +54,24 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
                                    interpret=default_interpret())
 
 
-@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
-                   static_argnames=("eos_id",))
-def admit_slots(cur_tok, lengths, remaining, done, slot_ids, last_logits,
+def admit_state(cur_tok, lengths, remaining, done, slot_ids, last_logits,
                 prompt_lens, max_news, *, eos_id: int = -1):
-    """Splice newly admitted requests into the decode-state vectors.
+    """Splice newly admitted requests into the decode-state vectors — the
+    composable core of :func:`admit_slots`.
 
-    One fused dispatch per admission phase: takes the [M] slot ids being
-    filled, the concatenated prefill logits [M, V] and per-request prompt
-    lengths / generation budgets, greedy-argmaxes the first tokens ON
-    DEVICE and scatters all four state vectors at once.  The state vectors
-    are donated (updated in place) — callers must rebind from the returns,
-    exactly like the decode loop.  Returns the updated state plus the [M]
-    first tokens, whose host fetch the engine defers until the next
-    macro-step block await (by which point they are long computed).
+    Takes the [M] slot ids being filled, the concatenated prefill logits
+    [M, V] and per-request prompt lengths / generation budgets,
+    greedy-argmaxes the first tokens ON DEVICE and scatters all four
+    state vectors at once.  Callers may PAD the admission vectors to a
+    fixed width by repeating the last real entry: duplicate scatter
+    indices then carry identical values, so the writes are idempotent and
+    every admitted-count reuses one compiled program (and one input
+    sharding) instead of tracing per width.
+
+    Not jitted here — the serving engine traces it inside the fused
+    boundary program (cache splice + state scatter, one dispatch per
+    boundary); :func:`admit_slots` keeps the standalone donated jit for
+    the per-step/boundary-blocking admission paths.
     """
     first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     cur_tok = cur_tok.at[slot_ids].set(first)
@@ -75,6 +79,22 @@ def admit_slots(cur_tok, lengths, remaining, done, slot_ids, last_logits,
     remaining = remaining.at[slot_ids].set(max_news - 1)
     done = done.at[slot_ids].set((max_news <= 1) | (first == eos_id))
     return cur_tok, lengths, remaining, done, first
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3),
+                   static_argnames=("eos_id",))
+def admit_slots(cur_tok, lengths, remaining, done, slot_ids, last_logits,
+                prompt_lens, max_news, *, eos_id: int = -1):
+    """One fused donated dispatch per admission phase (see
+    :func:`admit_state` for the semantics and the fixed-width padding
+    contract).  The state vectors are donated (updated in place) —
+    callers must rebind from the returns, exactly like the decode loop.
+    Returns the updated state plus the [M] first tokens, whose host fetch
+    the engine defers until the next macro-step block await (by which
+    point they are long computed).
+    """
+    return admit_state(cur_tok, lengths, remaining, done, slot_ids,
+                       last_logits, prompt_lens, max_news, eos_id=eos_id)
 
 
 def splice_blocks(dst, src, slot_ids):

@@ -106,6 +106,7 @@ def build_topology(kind: str, nodes: int,
 
 def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                      slots: int, split: str, macro_steps: int = 8,
+                     wave_steps: int = 1,
                      overlap_admission: bool = True,
                      topology: Optional[C.Topology] = None,
                      link=None, telemetry_path: Optional[str] = None,
@@ -138,6 +139,7 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
         traces = {gi: tr for gi in range(1, len(topology))}
     runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len,
                               macro_steps=macro_steps,
+                              wave_steps=wave_steps,
                               overlap_admission=overlap_admission,
                               prefix_cache_blocks=prefix_cache_blocks,
                               prefix_block_size=prefix_block_size,
@@ -210,6 +212,9 @@ def main():
     ap.add_argument("--macro-steps", type=int, default=8,
                     help="fused decode tokens per dispatch (0 = pre-fusion "
                          "per-token loop)")
+    ap.add_argument("--wave-steps", type=int, default=1,
+                    help="fused macro-steps per host launch (>1 = jitted "
+                         "wave driver; requires --macro-steps > 0)")
     ap.add_argument("--overlap-admission", default=True,
                     action=argparse.BooleanOptionalAction,
                     help="prefill newly admitted requests into shadow slots "
@@ -283,6 +288,9 @@ def main():
                  "trace replays on the HeteroRuntime wave clock)")
     if args.mobility_beta is not None and not args.link_trace:
         ap.error("--mobility-beta only applies to a --link-trace")
+    if args.wave_steps > 1 and not args.continuous:
+        ap.error("--wave-steps > 1 requires --continuous (the wave driver "
+                 "is the slot runtime's fused decode launcher)")
     topology = build_topology(args.topology, nodes,
                               prefill_group=args.prefill_group)
     P = args.prompt_len
@@ -294,6 +302,7 @@ def main():
         serve_continuous(cfg, params, reqs, prompt_len=P,
                          max_new=args.max_new, slots=args.slots,
                          split=args.split, macro_steps=args.macro_steps,
+                         wave_steps=args.wave_steps,
                          overlap_admission=args.overlap_admission,
                          topology=topology,
                          telemetry_path=args.telemetry_json,

@@ -52,6 +52,31 @@ def scaleout_mesh(devices=None, axes: Tuple[str, ...] = ("data", "model")):
     return jax.sharding.Mesh(np.array(devs).reshape(shape), axes)
 
 
+def replicated_sharding(mesh):
+    """The mesh-replicated NamedSharding — the placement contract for the
+    serving engine's carried decode-state vectors (cur_tok / lengths /
+    remaining / done).  Tiny [slots] vectors are replicated on every
+    device so the fused decode loop's input signature never changes
+    between dispatches."""
+    return NamedSharding(mesh, P())
+
+
+def put_replicated(tree, mesh=None):
+    """Commit every leaf of ``tree`` to ``mesh`` (default: the active
+    mesh) with a replicated sharding — the STICKY initial placement for
+    carried decode state.  Freshly created host-side arrays are otherwise
+    committed to a single device on first use, so the first fused decode
+    dispatch would see a different input sharding than every later one
+    (whose carried inputs come back mesh-attached from the previous
+    dispatch) and re-trace/re-shard at the steady-state boundary.  A
+    no-op off-mesh."""
+    mesh = mesh if mesh is not None else _STATE["mesh"]
+    if mesh is None:
+        return tree
+    s = replicated_sharding(mesh)
+    return jax.tree.map(lambda x: jax.device_put(x, s), tree)
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
     """`jax.shard_map` moved out of jax.experimental over several releases
     and renamed `check_rep` -> `check_vma` on the way; dispatch to whichever

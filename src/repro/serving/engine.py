@@ -46,8 +46,10 @@ bit-identical streams — ``prefill_fallbacks`` records the recoveries.
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -153,6 +155,109 @@ def _loop_program(cfg, loops: Dict, K: int, eos_id: Optional[int],
             donate_argnums=(1, 2, 3, 4, 5))
         loops[key] = fn
     return fn
+
+
+def make_wave_driver(cfg, *, macro_steps: int, wave_steps: int,
+                     eos_id: Optional[int] = None,
+                     use_pallas: Union[bool, str] = "auto"):
+    """Multi-macro-step wave driver: M fused K-token macro-steps in ONE
+    traced program (an outer ``lax.scan`` over :func:`make_decode_loop`'s
+    body), so steady-state decoding costs one host launch per M·K tokens
+    instead of one per K.
+
+    ``(params, cache, cur_tok, lengths, remaining, done)
+    -> (tokens [M, K, B], cache, cur_tok, lengths, remaining, done)``
+
+    Admission still lands at M-boundaries: the engine fetches the full
+    ``[M·K, B]`` token block per launch and slots that finish mid-wave
+    freeze exactly as they do mid-macro-step, so token streams stay
+    bit-identical to the single-step driver (and to ``macro_steps=0``).
+    Jit with ``donate_argnums=(1, 2, 3, 4, 5)`` like the inner loop.
+    """
+    loop = make_decode_loop(cfg, macro_steps=macro_steps, eos_id=eos_id,
+                            use_pallas=use_pallas)
+
+    def wave_driver(params, cache, cur_tok, lengths, remaining, done):
+        def body(carry, _):
+            cache, tok, lengths, remaining, done = carry
+            toks, cache, tok, lengths, remaining, done = loop(
+                params, cache, tok, lengths, remaining, done)
+            return (cache, tok, lengths, remaining, done), toks
+
+        carry, toks = jax.lax.scan(
+            body, (cache, cur_tok, lengths, remaining, done), None,
+            length=wave_steps)
+        cache, cur_tok, lengths, remaining, done = carry
+        return toks, cache, cur_tok, lengths, remaining, done
+
+    return wave_driver
+
+
+def _wave_program(cfg, waves: Dict, K: int, M: int, eos_id: Optional[int],
+                  use_pallas: bool):
+    """Fetch-or-build the jitted wave driver for (K, M, eos_id) in
+    ``waves`` (shared across sibling engines via ``share_from``, exactly
+    like ``_loop_program``)."""
+    key = (K, M, eos_id)
+    fn = waves.get(key)
+    if fn is None:
+        fn = jax.jit(
+            make_wave_driver(cfg, macro_steps=K, wave_steps=M,
+                             eos_id=eos_id, use_pallas=use_pallas),
+            donate_argnums=(1, 2, 3, 4, 5))
+        waves[key] = fn
+    return fn
+
+
+class _DecodeLauncher:
+    """Single background thread that executes fused decode launches.
+
+    Multi-device CPU programs execute synchronously inside the dispatch
+    call, so on the emulated scale-out tier the serve loop's
+    ``t_dispatch_s`` bucket was really device execution wall — ~99% of
+    the 64-device macro-step wall looked like "host launch cost".
+    Routing the launch through one worker thread makes the decomposition
+    honest and buys real overlap: ``submit`` returns immediately (its
+    wall is the true host-side launch tax), the shadow-prefill top-up
+    runs while the macro-step executes (XLA releases the GIL), and the
+    execution wall lands in ``t_await_s`` at ``Future.result()``.
+
+    ``jax.Mesh`` contexts are thread-local (and key the jit cache), so
+    the worker re-enters the mesh the engine was built under — otherwise
+    every launch would retrace.  Exceptions surface at the await.  Note
+    ``jax.transfer_guard`` is also thread-local: tests that guard the
+    decode loop run with ``async_dispatch=False``.
+
+    The FIRST submit of each program runs inline on the caller's thread
+    and returns the bare result (callers treat future-less returns as
+    already-complete).  First call means jit trace + XLA compile; doing
+    that on the worker thread while the main thread concurrently traces
+    prefill/boundary programs has deadlocked on wide emulated meshes.
+    Steady-state launches — the ones ``t_dispatch_s`` is about — still
+    go through the worker.
+    """
+
+    def __init__(self, mesh=None):
+        self._mesh = mesh
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._warm: set = set()
+
+    def _enter_mesh(self):
+        # entered once for the worker thread's lifetime
+        if self._mesh is not None:
+            self._mesh.__enter__()
+
+    def submit(self, fn, *args):
+        if id(fn) not in self._warm:
+            # compile-on-first-call happens on the caller's thread, which
+            # already holds the mesh context
+            self._warm.add(id(fn))
+            return fn(*args)
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="decode-launch",
+                initializer=self._enter_mesh)
+        return self._pool.submit(fn, *args)
 
 
 # ---------------------------------------------------------------------------
@@ -297,14 +402,20 @@ class ServingEngine:
         tok = jnp.argmax(last_logits, axis=-1)[:, None].astype(jnp.int32)
         out_toks = [np.asarray(tok)]
         host_syncs = 1
+        # device-resident position counter: one seed upload, then the
+        # index advances on device instead of re-uploading a fresh
+        # jnp.int32(idx) scalar every token.  The per-token np.asarray
+        # fetch above is the loop's only host sync — the old trailing
+        # block_until_ready(tok) double-synced a token the fetch had
+        # already materialized.
+        idx_dev = jnp.int32(idx)
         t0 = time.perf_counter()
         for _ in range(max_new - 1):
-            logits, cache = self.step(self.params, cache, tok, jnp.int32(idx))
+            logits, cache = self.step(self.params, cache, tok, idx_dev)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             out_toks.append(np.asarray(tok))
             host_syncs += 1
-            idx += 1
-        jax.block_until_ready(tok)
+            idx_dev = idx_dev + 1
         t_decode = time.perf_counter() - t0
         toks = np.concatenate(out_toks, axis=1)
         return GenerationResult(
@@ -377,6 +488,33 @@ def stack_prefill_blocks(caches):
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1), *caches)
 
 
+def admit_boundary(cfg, big_cache, blocks, slot_ids, cur_tok, lengths,
+                   remaining, done, last_logits, prompt_lens, max_news,
+                   *, eos_id: int = -1):
+    """ONE donated program for a whole admission boundary: splice the
+    admitted prefill blocks into the big decode cache
+    (:func:`splice_slot_caches`) AND scatter all four decode-state
+    vectors (``kernels/ops.admit_state``) in a single dispatch — a
+    boundary used to cost three (splice or per-slot writes, then
+    ``admit_slots``, then the next decode launch saw re-uploaded state).
+
+    All vector arguments are PADDED to the engine's fixed slot width by
+    repeating the last real entry (``blocks`` likewise repeats the last
+    block): duplicate writes carry identical bytes, so the result is
+    unchanged while every admitted-count reuses one compiled program and
+    one input sharding.  Returns ``(cache, cur_tok, lengths, remaining,
+    done, first)`` — the big cache and the state vectors are donated, so
+    callers must rebind from the returns.
+    """
+    from repro.kernels.ops import admit_state
+
+    cache = splice_slot_caches(cfg, big_cache, blocks, slot_ids)
+    cur_tok, lengths, remaining, done, first = admit_state(
+        cur_tok, lengths, remaining, done, slot_ids, last_logits,
+        prompt_lens, max_news, eos_id=eos_id)
+    return cache, cur_tok, lengths, remaining, done, first
+
+
 @dataclass
 class ServeRequest:
     """One unit of work for the continuous-batching queue."""
@@ -408,7 +546,11 @@ class ContinuousStats:
     host_syncs: int = 0                # device→host materializations (one
                                        # per macro-step + one per admission
                                        # phase; per-token when macro_steps=0)
-    macro_dispatches: int = 0          # fused decode-loop invocations
+    macro_dispatches: int = 0          # fused K-token macro-steps executed
+                                       # (wave launches count M each)
+    wave_launches: int = 0             # host launches of the fused decode
+                                       # driver (== macro_dispatches unless
+                                       # wave_steps > 1)
     t_per_macro_step_s: float = 0.0    # decode wall per fused dispatch
     t_prefill_overlap_s: float = 0.0   # host wall spent dispatching shadow
                                        # prefills behind the in-flight decode
@@ -520,7 +662,9 @@ class ContinuousServingEngine:
                  use_pallas: Union[bool, str] = "auto",
                  eos_id: Optional[int] = None,
                  macro_steps: int = 8,
+                 wave_steps: int = 1,
                  overlap_admission: bool = True,
+                 async_dispatch: bool = True,
                  prefill_worker: Optional[Any] = None,
                  prefix_cache: Optional[Any] = None,
                  share_from: Optional["ContinuousServingEngine"] = None):
@@ -546,11 +690,27 @@ class ContinuousServingEngine:
         resume prefill from the matched block span; misses prefill cold.
         All finished prefills are re-indexed.  Token streams stay
         bit-identical — exact-match radix reuse returns the same bytes a
-        cold prefill would compute."""
+        cold prefill would compute.
+
+        ``wave_steps=M`` (opt-in, fused path only): run M macro-steps per
+        host launch through :func:`make_wave_driver` — admission moves to
+        M-boundaries, streams stay bit-identical.
+
+        ``async_dispatch`` (default True, overlapped path): launch fused
+        decode programs on a background thread so ``t_dispatch_s``
+        measures the host-side launch tax and the device execution lands
+        in ``t_await_s`` (see :class:`_DecodeLauncher`)."""
         self.cfg, self.params = cfg, params
         self.prefix_cache = prefix_cache
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.macro_steps = int(macro_steps)
+        self.wave_steps = int(wave_steps)
+        if self.wave_steps < 1:
+            raise ValueError(f"wave_steps must be >= 1, got {wave_steps}")
+        if self.wave_steps > 1 and self.macro_steps == 0:
+            raise ValueError("wave_steps > 1 needs the fused decode path "
+                             "(macro_steps > 0)")
+        self.async_dispatch = bool(async_dispatch)
         self.overlap_admission = bool(overlap_admission)
         self.prefill_worker = prefill_worker
         if prefill_worker is not None and (
@@ -570,7 +730,9 @@ class ContinuousServingEngine:
             self.step = share_from.step
             self._write_slot = share_from._write_slot
             self._splice_slots = share_from._splice_slots
+            self._admit_boundary = share_from._admit_boundary
             self._loops = share_from._loops
+            self._waves = share_from._waves
         else:
             self.prefill = jax.jit(
                 make_prefill_step(cfg, use_pallas=self._use_pallas))
@@ -591,18 +753,40 @@ class ContinuousServingEngine:
                 lambda big, blocks, ids: splice_slot_caches(cfg, big,
                                                             blocks, ids),
                 donate_argnums=(0,))
+            # fused boundary: cache splice + state scatter in ONE donated
+            # program (big cache + all four state vectors); the blocks
+            # are consumed-by-contract exactly like _splice_slots'
+            self._admit_boundary = jax.jit(
+                functools.partial(admit_boundary, cfg),
+                static_argnames=("eos_id",),
+                donate_argnums=(0, 3, 4, 5, 6))
             self._loops: Dict[Tuple[int, Optional[int]], Any] = {}
+            self._waves: Dict[Tuple[int, int, Optional[int]], Any] = {}
         self._offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
+        # the launcher thread re-enters the engine's mesh (thread-local in
+        # jax); capture it at construction, like the programs' tracings
+        from repro.models.sharding import active_mesh
+        self._launcher = _DecodeLauncher(active_mesh()) \
+            if self.async_dispatch else None
 
     def _get_loop(self, K: int):
         return _loop_program(self.cfg, self._loops, K, self.eos_id,
                              self._use_pallas)
 
+    def _get_wave(self, K: int, M: int):
+        return _wave_program(self.cfg, self._waves, K, M, self.eos_id,
+                             self._use_pallas)
+
     # ------------------------------------------------------------------
     def _make_batch(self, req: ServeRequest):
-        batch = {"tokens": jnp.asarray(req.prompt[None])}
+        # HOST-side (numpy) batch: the jitted prefill uploads it at call
+        # time anyway, and keeping it off-device lets the prefill pool's
+        # content-hash affinity key read the prompt bytes without a
+        # device->host fetch — eagerly uploading here put one host sync
+        # on every pool dispatch
+        batch = {"tokens": np.asarray(req.prompt)[None]}
         if req.frontend is not None:
-            batch["frontend"] = jnp.asarray(req.frontend[None])
+            batch["frontend"] = np.asarray(req.frontend)[None]
         return batch
 
     def _account_hit(self, hit) -> None:
@@ -665,13 +849,54 @@ class ContinuousServingEngine:
         return steps_used, busy_inc
 
     # ------------------------------------------------------------------
+    def _pad_admit_args(self, entries):
+        """Build the FIXED-WIDTH admission vectors for ``entries`` (a list
+        of ``(slot, req, last_logits)``), padded to the engine's slot
+        count by repeating the last real entry.  Padded scatter writes
+        carry identical values, so they are idempotent — and every
+        admitted-count reuses one jitted program and one input sharding
+        instead of tracing/re-sharding per distinct width.  Returns
+        ``(slot_ids [slots], logits [slots, V], prompt_lens [slots],
+        max_news [slots])``."""
+        pad = self.slots - len(entries)
+        ids = [e[0] for e in entries] + [entries[-1][0]] * pad
+        logits = [e[2] for e in entries] + [entries[-1][2]] * pad
+        plens = [len(e[1].prompt) + self._offset for e in entries]
+        plens += [plens[-1]] * pad
+        mnews = [e[1].max_new for e in entries]
+        mnews += [mnews[-1]] * pad
+        return (jnp.asarray(ids, jnp.int32),
+                jnp.concatenate(logits, axis=0),
+                jnp.asarray(plens, jnp.int32),
+                jnp.asarray(mnews, jnp.int32))
+
+    def _per_step_advance(self, cache, cur_tok, lengths, done):
+        """One pre-fusion (``macro_steps=0``) decode step with the state
+        advance ON DEVICE: greedy-argmax the next token, move only the
+        live (``~done``) slots forward, and fetch a single stream-facing
+        NumPy copy of the token vector — the ONE host sync of the step.
+        Busy slots are exactly ``~done`` when this runs (eviction froze
+        every finished slot, and zero-budget / eos-at-admission slots are
+        evicted before they ever decode), so the carried state never
+        round-trips through the host: the old path re-uploaded
+        ``new_tok``/``busy`` via ``jnp.asarray`` every step."""
+        logits, cache = self.step(self.params, cache,
+                                  cur_tok[:, None], lengths)
+        new_tok_dev = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        adv = jnp.logical_not(done)
+        cur_tok = jnp.where(adv, new_tok_dev, cur_tok)
+        lengths = lengths + adv
+        return cache, cur_tok, lengths, np.asarray(new_tok_dev)
+
     def _admit_free_slots(self, pending, slot_states, cache, cur_tok,
                           lengths, remaining, done, step_no: int):
         """Admit queued requests into every free slot.  Two phases so the
         B=1 prefills overlap: dispatch ALL prefills + slot writes first
-        (JAX async dispatch), then materialize every admitted slot's first
-        token in ONE batched device fetch (a per-slot ``int(argmax)`` would
-        sync once per admission).  Returns the wall spent dispatching the
+        (JAX async dispatch), then scatter the decode-state vectors in
+        ONE padded ``admit_slots`` dispatch and materialize the admitted
+        slots' first tokens in ONE batched fetch (a per-slot host
+        ``.at[].set(int(argmax))`` loop would re-upload state and sync
+        once per admission).  Returns the wall spent dispatching the
         per-slot big-cache writes as the last element (the scale-out
         harness's slot-write bucket)."""
         admitted = []
@@ -686,22 +911,19 @@ class ContinuousServingEngine:
                 admitted.append((slot, req, last_logits))
         syncs = 0
         if admitted:
-            firsts = np.asarray(jnp.argmax(
-                jnp.concatenate([ll for _, _, ll in admitted], axis=0),
-                axis=-1).astype(jnp.int32))
+            from repro.kernels import ops as ops_mod
+            ids, logits, plens, mnews = self._pad_admit_args(admitted)
+            cur_tok, lengths, remaining, done, first_dev = \
+                ops_mod.admit_slots(
+                    cur_tok, lengths, remaining, done, ids, logits, plens,
+                    mnews,
+                    eos_id=-1 if self.eos_id is None else int(self.eos_id))
+            firsts = np.asarray(first_dev)
             syncs = 1
             for (slot, req, _), first in zip(admitted, firsts):
-                first = int(first)
                 slot_states[slot] = _Slot(
                     uid=req.uid, remaining=req.max_new - 1,
-                    tokens=[first], admitted_step=step_no)
-                cur_tok = cur_tok.at[slot].set(first)
-                lengths = lengths.at[slot].set(
-                    len(req.prompt) + self._offset)
-                remaining = remaining.at[slot].set(req.max_new - 1)
-                done = done.at[slot].set(
-                    req.max_new <= 1
-                    or (self.eos_id is not None and first == self.eos_id))
+                    tokens=[int(first)], admitted_step=step_no)
         return cache, cur_tok, lengths, remaining, done, syncs, t_write
 
     # ------------------------------------------------------------------
@@ -736,11 +958,16 @@ class ContinuousServingEngine:
         K = self.macro_steps
         pending = deque(requests)
         slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
-        # device-resident decode state; done=True marks free/frozen slots
-        lengths = jnp.zeros((self.slots,), jnp.int32)
-        cur_tok = jnp.zeros((self.slots,), jnp.int32)
-        remaining = jnp.zeros((self.slots,), jnp.int32)
-        done = jnp.ones((self.slots,), bool)
+        # device-resident decode state; done=True marks free/frozen slots.
+        # The initial placement is committed mesh-replicated (sticky) so
+        # the FIRST fused dispatch already sees the same input shardings
+        # every later dispatch carries back — no steady-state re-shard.
+        from repro.models.sharding import put_replicated
+        lengths, cur_tok, remaining, done = put_replicated((
+            jnp.zeros((self.slots,), jnp.int32),
+            jnp.zeros((self.slots,), jnp.int32),
+            jnp.zeros((self.slots,), jnp.int32),
+            jnp.ones((self.slots,), bool)))
         cache = M.init_cache(cfg, self.slots, self.max_len,
                              dtype=cfg.jnp_dtype)
         outputs: List[RequestOutput] = []
@@ -750,6 +977,7 @@ class ContinuousServingEngine:
         t_slot_write = t_dispatch = t_await = 0.0
         host_syncs = 0
         dispatches = 0
+        wave_launches = 0
         stalls = 0
 
         def _finished(s: _Slot) -> bool:
@@ -790,42 +1018,41 @@ class ContinuousServingEngine:
             if K == 0:
                 # --- pre-fusion loop: one step, one sync per token ----
                 t0 = time.perf_counter()
-                logits, cache = self.step(self.params, cache,
-                                          cur_tok[:, None], lengths)
-                new_tok = np.asarray(
-                    jnp.argmax(logits, axis=-1).astype(jnp.int32))
+                cache, cur_tok, lengths, new_tok = self._per_step_advance(
+                    cache, cur_tok, lengths, done)
                 host_syncs += 1
                 t_decode += time.perf_counter() - t0
                 step_no += 1
-                busy = np.array([s.busy for s in slot_states])
-                busy_acc += busy.sum() / self.slots
-                adv = jnp.asarray(busy)
-                cur_tok = jnp.where(adv, jnp.asarray(new_tok), cur_tok)
-                lengths = lengths + adv
+                busy_acc += sum(
+                    1 for s in slot_states if s.busy) / self.slots
                 for i, s in enumerate(slot_states):
                     if s.busy:
                         s.tokens.append(int(new_tok[i]))
                         s.remaining -= 1
                 continue
 
-            # --- one fused macro-step over all slots ------------------
+            # --- one fused macro-step (or wave of M) over all slots ---
             # dispatch (async launch) and await (device execution) are
             # bucketed separately for the scale-out harness; t_decode
             # stays their exact sum
+            W = self.wave_steps
+            fn = self._get_wave(K, W) if W > 1 else self._get_loop(K)
             t0 = time.perf_counter()
             toks, cache, cur_tok, lengths, remaining, done = \
-                self._get_loop(K)(self.params, cache, cur_tok, lengths,
-                                  remaining, done)
+                fn(self.params, cache, cur_tok, lengths, remaining, done)
             t1 = time.perf_counter()
-            block = np.asarray(toks)      # [K, slots]: the ONE host sync
+            block = np.asarray(toks)      # the ONE host sync
             t2 = time.perf_counter()
+            if block.ndim == 3:           # wave driver: [W, K, slots]
+                block = block.reshape(-1, self.slots)
             t_dispatch += t1 - t0
             t_await += t2 - t1
             host_syncs += 1
-            dispatches += 1
+            dispatches += W
+            wave_launches += 1
 
             steps_used, busy_inc = self._consume_block(
-                block, slot_states, K, step_no)
+                block, slot_states, W * K, step_no)
             busy_acc += busy_inc
             step_no += steps_used
 
@@ -843,6 +1070,7 @@ class ContinuousServingEngine:
             tokens_per_s=total_tokens / max(wall, 1e-9),
             occupancy=busy_acc / max(step_no, 1),
             host_syncs=host_syncs, macro_dispatches=dispatches,
+            wave_launches=wave_launches,
             t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
             else 0.0,
             admission_stalls=stalls,
@@ -865,18 +1093,26 @@ class ContinuousServingEngine:
         Per iteration, in dispatch order (all async — OffloadEngine's
         dispatch-all-then-await pattern):
 
-          1. splice ready shadow prefills into free slots: donated
-             slot-cache writes + one fused ``admit_slots`` state scatter
+          1. splice ready shadow prefills into free slots: ONE fused
+             donated boundary program (``admit_boundary`` = cache splice
+             + decode-state scatter) over FIXED-WIDTH padded admission
+             vectors, so every boundary costs one dispatch and one
+             compiled program regardless of how many slots it fills
              (the only prefill work on the critical path; a shadow miss
              here with live slots waiting counts as an admission stall),
-          2. launch the decode macro-step for the live slots,
+          2. launch the decode macro-step for the live slots — one
+             fused K-step program, or the ``wave_steps=M`` jitted wave
+             driver covering M macro-steps per host launch; with
+             ``async_dispatch`` the launch happens on the
+             :class:`_DecodeLauncher` thread so ``t_dispatch_s`` is the
+             true submit cost,
           3. top the shadow queue back up to ``slots`` speculative B=1
              prefills from the pending queue — these execute behind the
              in-flight macro-step, off the critical path,
-          4. await the macro-step's ``[K, slots]`` token block (the ONE
-             host sync), piggybacking the spliced slots' first tokens on
-             it (they were enqueued before the decode loop, so the fetch
-             returns immediately), then evict finished slots.
+          4. await the macro-step's ``[M*K, slots]`` token block (the
+             ONE host sync), piggybacking the spliced slots' first
+             tokens on it (they were enqueued before the decode loop, so
+             the fetch returns immediately), then evict finished slots.
 
         Shadows are request-keyed, not slot-keyed, so a speculative
         prefill is never wasted — at worst it waits another boundary for a
@@ -894,19 +1130,23 @@ class ContinuousServingEngine:
         ``prefill_fallbacks`` counts the recoveries, the streams do not
         change.
         """
-        from repro.kernels.ops import admit_slots
+        from repro.models.sharding import put_replicated
 
         cfg = self.cfg
         K = self.macro_steps
+        W = self.wave_steps
         eos = self.eos_id
         worker = self.prefill_worker
         pending = deque(requests)
         shadows: deque = deque()          # in-flight speculative prefills
         slot_states: List[_Slot] = [_Slot() for _ in range(self.slots)]
-        lengths = jnp.zeros((self.slots,), jnp.int32)
-        cur_tok = jnp.zeros((self.slots,), jnp.int32)
-        remaining = jnp.zeros((self.slots,), jnp.int32)
-        done = jnp.ones((self.slots,), bool)
+        # sticky replicated placement: the first fused dispatch sees the
+        # same carried-state shardings as every later one (no re-shard)
+        lengths, cur_tok, remaining, done = put_replicated((
+            jnp.zeros((self.slots,), jnp.int32),
+            jnp.zeros((self.slots,), jnp.int32),
+            jnp.zeros((self.slots,), jnp.int32),
+            jnp.ones((self.slots,), bool)))
         cache = M.init_cache(cfg, self.slots, self.max_len,
                              dtype=cfg.jnp_dtype)
         outputs: List[RequestOutput] = []
@@ -916,6 +1156,7 @@ class ContinuousServingEngine:
         t_kv_transfer = 0.0
         t_splice = t_slot_write = t_dispatch = t_await = 0.0
         host_syncs = dispatches = stalls = n_shadow = 0
+        wave_launches = 0
         n_offloaded = n_fallbacks = 0
 
         def _worker_error():
@@ -1075,31 +1316,27 @@ class ContinuousServingEngine:
                     axis=-1).astype(jnp.int32)
             first_dev = None
             if newly:
+                # ONE fused donated boundary dispatch for all admitted
+                # blocks (KV transfers and local shadows alike): cache
+                # splice + decode-state scatter in a single program over
+                # FIXED-WIDTH padded vectors/blocks, so every boundary
+                # reuses one compiled program and one input sharding
+                # regardless of the admitted count.  The wall lands in
+                # the arm's bucket: splice (disaggregated) vs slot-write
+                # (local-shadow baseline) — never both.
                 tb0 = time.perf_counter()
+                ids, logits_cat, plens, mnews = self._pad_admit_args(newly)
+                blks = tuple(blocks
+                             + [blocks[-1]] * (self.slots - len(blocks)))
+                cache, cur_tok, lengths, remaining, done, first_dev = \
+                    self._admit_boundary(
+                        cache, blks, ids, cur_tok, lengths, remaining,
+                        done, logits_cat, plens, mnews,
+                        eos_id=-1 if eos is None else int(eos))
                 if worker is not None:
-                    # disaggregated mode: ONE donated cross-group splice
-                    # for all admitted blocks (KV transfers and fallback-
-                    # local shadows alike) — a boundary costs one cache
-                    # dispatch instead of one per slot
-                    cache = self._splice_slots(
-                        cache, tuple(blocks),
-                        jnp.asarray([n[0] for n in newly], jnp.int32))
                     t_splice += time.perf_counter() - tb0
                 else:
-                    # PR-4 local-shadow baseline: per-slot donated writes
-                    # (kept byte-for-byte as the A/B arm the benchmark
-                    # gates the disaggregated path against)
-                    for (slot, _req, _ll), blk in zip(newly, blocks):
-                        cache = self._write_slot(cache, blk, slot)
                     t_slot_write += time.perf_counter() - tb0
-                cur_tok, lengths, remaining, done, first_dev = admit_slots(
-                    cur_tok, lengths, remaining, done,
-                    jnp.asarray([n[0] for n in newly], jnp.int32),
-                    jnp.concatenate([n[2] for n in newly], axis=0),
-                    jnp.asarray([len(n[1].prompt) + self._offset
-                                 for n in newly], jnp.int32),
-                    jnp.asarray([n[1].max_new for n in newly], jnp.int32),
-                    eos_id=-1 if eos is None else int(eos))
                 for slot, req, _ in newly:
                     slot_states[slot] = _Slot(
                         uid=req.uid, remaining=req.max_new - 1,
@@ -1108,14 +1345,24 @@ class ContinuousServingEngine:
 
             # --- 2. launch the macro-step (never waits on prefill) -----
             # skip slots the host already knows are spent (budget == 0);
-            # an eos-on-first-token slot is frozen device-side instead
+            # an eos-on-first-token slot is frozen device-side instead.
+            # With async_dispatch the launch runs on the launcher thread:
+            # t_dispatch_s is the true submit cost, device execution
+            # lands in t_await_s.  The donated carried buffers are handed
+            # to the launch and MUST NOT be touched until the rebind at
+            # step 4 (step 3 only dispatches fresh prefills).
             t0 = time.perf_counter()
-            toks = None
+            launch = None
             if any(s.busy and s.remaining > 0 and not _eos_done(s)
                    for s in slot_states):
-                toks, cache, cur_tok, lengths, remaining, done = \
-                    self._get_loop(K)(self.params, cache, cur_tok, lengths,
-                                      remaining, done)
+                fn = self._get_wave(K, W) if W > 1 else self._get_loop(K)
+                if self._launcher is not None:
+                    launch = self._launcher.submit(
+                        fn, self.params, cache, cur_tok, lengths,
+                        remaining, done)
+                else:
+                    launch = fn(self.params, cache, cur_tok, lengths,
+                                remaining, done)
             t_dispatch += time.perf_counter() - t0
 
             # --- 3. top up speculative shadow prefills -----------------
@@ -1136,10 +1383,16 @@ class ContinuousServingEngine:
             # --- 4. the ONE await: token block + piggybacked firsts ----
             t0a = time.perf_counter()
             block = None
-            if toks is not None:
+            if launch is not None:
+                res = launch.result() if hasattr(launch, "result") \
+                    else launch
+                toks, cache, cur_tok, lengths, remaining, done = res
                 block = np.asarray(toks)
+                if block.ndim == 3:       # wave driver: [W, K, slots]
+                    block = block.reshape(-1, self.slots)
                 host_syncs += 1
-                dispatches += 1
+                dispatches += W
+                wave_launches += 1
             if first_dev is not None:
                 firsts = np.asarray(first_dev)   # enqueued before the
                 host_syncs += 1                  # loop: instant by now
@@ -1157,7 +1410,7 @@ class ContinuousServingEngine:
 
             if block is not None:
                 steps_used, busy_inc = self._consume_block(
-                    block, slot_states, K, step_no)
+                    block, slot_states, W * K, step_no)
                 busy_acc += busy_inc
                 step_no += steps_used
 
@@ -1185,6 +1438,7 @@ class ContinuousServingEngine:
             tokens_per_s=total_tokens / max(wall, 1e-9),
             occupancy=busy_acc / max(step_no, 1),
             host_syncs=host_syncs, macro_dispatches=dispatches,
+            wave_launches=wave_launches,
             t_per_macro_step_s=t_decode / max(dispatches, 1) if dispatches
             else 0.0,
             t_prefill_overlap_s=t_overlap, admission_stalls=stalls,

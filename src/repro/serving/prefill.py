@@ -289,7 +289,10 @@ class PrefillWorkerPool:
     @staticmethod
     def _batch_key(batch) -> int:
         """Stable content hash of the prompt (tokens only — the frontend
-        rides along with the same prompt in every workload we serve)."""
+        rides along with the same prompt in every workload we serve).
+        The engine hands the batch over host-side (numpy), so hashing
+        never forces a device->host transfer on the dispatch path; a
+        device-resident batch would pay one sync per pool dispatch."""
         import hashlib
 
         import numpy as np

@@ -64,11 +64,22 @@ def _poison_engine(eng):
         # (consumed-by-contract — deleting them proves the engine never
         # reuses a transferred shadow cache after its splice)
         eng._splice_slots = _poison(eng._splice_slots, (0, 1))
+    if hasattr(eng, "_admit_boundary"):            # ONE-dispatch boundary:
+        # big cache + all four carried state vectors (donated) AND the
+        # padded admitted blocks (consumed-by-contract, like the splice's)
+        eng._admit_boundary = _poison(eng._admit_boundary,
+                                      (0, 1, 3, 4, 5, 6))
     orig_get = eng._get_loop
 
     def get_loop(K, *a):
         return _poison(orig_get(K, *a), (1, 2, 3, 4, 5))
     eng._get_loop = get_loop
+    if hasattr(eng, "_get_wave"):                  # wave driver: donates
+        orig_wave = eng._get_wave                  # like the inner loop
+
+        def get_wave(K, W, *a):
+            return _poison(orig_wave(K, W, *a), (1, 2, 3, 4, 5))
+        eng._get_wave = get_wave
     return eng
 
 
@@ -123,6 +134,8 @@ def test_continuous_schedules_never_reuse_donated(arch, kv_int8,
     for kwargs in ({"macro_steps": 0},
                    {"macro_steps": 4, "overlap_admission": False},
                    {"macro_steps": 4, "overlap_admission": True},
+                   {"macro_steps": 4, "overlap_admission": True,
+                    "wave_steps": 2},
                    {"macro_steps": 4, "overlap_admission": True,
                     "remote": True}):
         kwargs = dict(kwargs)
