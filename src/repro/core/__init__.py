@@ -8,11 +8,14 @@ solver     constrained split-ratio optimization (Eq. 4) + star topology
 network    Shannon–Hartley link models (§V-A.2)
 battery    battery/charging constraints (Eqs. 5-6)
 mobility   distance-latency model + β threshold (§V-A.5)
-scheduler  online decision loop (Algorithm 1)
+scheduler  online decision loop (Algorithm 1) + ingress tenant fairness
+admission  power/memory/busy-factor admission boundary conditions
 offload    split execution across node groups
 topology   N-node topologies + the HeteroRuntime session facade (§VIII)
 masking    frame/token-level compression (§VI)
 """
+from repro.core.admission import (AdmissionController, GroupAdmission,
+                                  GroupBudget, kv_cache_bytes)
 from repro.core.battery import BatteryState, available_power, offload_pressure
 from repro.core.curvefit import FittedModels, PolyFit, fit_profiles, polyfit
 from repro.core.mobility import (LinkTrace, MobilityModel,
@@ -31,10 +34,14 @@ from repro.core.profiler import (DeviceProfile, JETSON_NANO, JETSON_XAVIER,
 from repro.core.scheduler import (Backoff, ControllerConfig, OffloadDecision,
                                   PrefillRoute, PrefillRouter,
                                   SchedulerConfig, SplitRatioController,
-                                  TaskScheduler)
+                                  TaskScheduler, TenantClass,
+                                  TenantScheduler)
 from repro.core.solver import (SolverConstraints, SolverResult, objective,
                                solve_split_ratio, solve_star)
 from repro.core.topology import (HeteroRuntime, ServeResult, SplitVector,
                                  TaskSpec, Topology, group_times_from_fits)
+from repro.serving.frontend import (FrontendError, QueueFullError,
+                                    RequestAbortedError, RequestShedError,
+                                    ServingFrontend, TokenStream)
 from repro.serving.prefill import (PrefillWorker, PrefillWorkerError,
                                    PrefillWorkerTimeout)

@@ -246,6 +246,21 @@ class OffloadReport:
                                         # edge (hub entry 0.0)
     mobility_latched: int = 0   # decode edges forced local this wave by the
                                 # β-threshold mobility latch (§V-A.5)
+    # --- power/memory/busy-factor admission (PR 10) -----------------------
+    admission_hot: Tuple[bool, ...] = ()   # per-decode-group hot flag this
+                                           # wave (power/memory/busy budget
+                                           # tripped — ordered like
+                                           # group_names)
+    admission_rerouted: int = 0  # requests this wave that the hot-mask
+                                 # re-routed off their budget-hot group via
+                                 # the masked-simplex split
+    power_headroom_w: Tuple[float, ...] = ()   # P_available − threshold per
+                                               # decode group (battery Eq. 6;
+                                               # wall-power groups report
+                                               # their full profile budget)
+    mem_headroom_frac: Tuple[float, ...] = ()  # λ − kv_bytes/(chips·HBM)
+                                               # per decode group (Alg. 1
+                                               # line 3)
     # --- scale-out timing decomposition (PR 6) ----------------------------
     # Summed ContinuousStats buckets across the wave's engines; on fused
     # paths decode wall == t_dispatch_s + t_await_s per engine (see

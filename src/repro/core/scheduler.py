@@ -30,8 +30,9 @@ local whenever the group is absent, dead, or simply slower.
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -706,3 +707,111 @@ class SplitRatioController:
             t_baseline=t_base,
             improvement=1.0 - float(t_opt) / max(t_base, 1e-9),
             diagnostics={"fractions": f.tolist()}))
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant ingress fairness (PR 10)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TenantClass:
+    """One tenant's deadline/priority class at the serving ingress.
+
+    ``TaskScheduler.decide`` gates a single UGV's work on deadline
+    feasibility (mobility latency < β); the ingress generalizes that to
+    many tenants sharing one fleet: ``priority`` ranks the deadline
+    class (0 = tightest TTFT deadline — preempts the admission queue),
+    ``weight`` sets the tenant's long-run fair share, and ``deadline_s``
+    is the class's TTFT target (telemetry-facing: the SLO bench gates
+    p99 TTFT against it)."""
+    name: str
+    priority: int = 1
+    weight: float = 1.0
+    deadline_s: float = float("inf")
+
+    def __post_init__(self):
+        if self.weight <= 0.0:
+            raise ValueError(f"tenant {self.name!r}: weight must be > 0")
+        if self.priority < 0:
+            raise ValueError(f"tenant {self.name!r}: priority must be >= 0")
+
+
+class TenantScheduler:
+    """Weighted deficit round-robin across tenants, with deadline-class
+    preemption of the admission queue.
+
+    Classic DRR, cost 1 per request: each round every *backlogged*
+    tenant earns ``weight · quantum`` of deficit — whether or not the
+    round reaches it — and drains whole requests while its deficit
+    covers them; a tenant's deficit resets when its queue empties (no
+    banked credit bursts).  Draining rotates: each round resumes at the
+    tenant where the previous wave filled up, so a tenant that fills
+    every wave cannot pin the visit order on itself.  The selected wave
+    is emitted urgent-class first, so a tight-deadline tenant preempts
+    the dispatch *order* every wave — but never the deficit
+    *accounting*, which is what makes starvation impossible: a
+    backlogged tenant's deficit grows every round until the rotation
+    reaches it with credit to spend, no matter how adversarial the
+    arrival schedule (property-tested in tests/test_frontend.py).
+
+    Deterministic and host-side only — no clocks, no PRNG — so the
+    derandomized hypothesis suite can pin its behavior exactly."""
+
+    def __init__(self, tenants: Dict[str, TenantClass],
+                 quantum: float = 1.0):
+        if not tenants:
+            raise ValueError("at least one TenantClass is required")
+        self.tenants = dict(tenants)
+        self.quantum = float(quantum)
+        self._order = sorted(self.tenants,
+                             key=lambda t: (self.tenants[t].priority, t))
+        self._queues: Dict[str, deque] = {t: deque() for t in self._order}
+        self._deficit: Dict[str, float] = {t: 0.0 for t in self._order}
+        self._rot = 0     # rotating drain pointer into _order
+
+    def enqueue(self, tenant: str, item: Any) -> int:
+        """FIFO within a tenant; returns the tenant's queue depth after
+        the push (the frontend's backpressure signal)."""
+        if tenant not in self._queues:
+            raise KeyError(f"unknown tenant {tenant!r} "
+                           f"(have {sorted(self._queues)})")
+        self._queues[tenant].append(item)
+        return len(self._queues[tenant])
+
+    def backlog(self, tenant: Optional[str] = None) -> int:
+        if tenant is not None:
+            return len(self._queues[tenant])
+        return sum(len(q) for q in self._queues.values())
+
+    def select(self, n: int) -> List[Tuple[str, Any]]:
+        """Pop up to ``n`` requests for the next wave.  Always returns
+        ``min(n, backlog)`` items — DRR rounds repeat until the wave is
+        full, so a full fleet never idles on deficit bookkeeping."""
+        picked: List[Tuple[str, Any]] = []
+        order, T = self._order, len(self._order)
+        while len(picked) < n and self.backlog():
+            # credit EVERY backlogged tenant up front: a wave that fills
+            # early must not stop the others' deficit clocks
+            for t in order:
+                if self._queues[t]:
+                    self._deficit[t] += self.tenants[t].weight * self.quantum
+            start = self._rot
+            for k in range(T):
+                t = order[(start + k) % T]
+                q = self._queues[t]
+                if not q:
+                    continue
+                while q and self._deficit[t] >= 1.0 and len(picked) < n:
+                    picked.append((t, q.popleft()))
+                    self._deficit[t] -= 1.0
+                if not q:
+                    self._deficit[t] = 0.0
+                if len(picked) >= n:
+                    # always resume PAST the tenant that filled the wave
+                    # — banked deficit keeps its claim, but the filler
+                    # never pins the rotation on itself
+                    self._rot = (start + k + 1) % T
+                    break
+        # deadline-class preemption: the wave DISPATCH order is
+        # urgent-class first (stable within a class — FIFO preserved)
+        picked.sort(key=lambda p: self.tenants[p[0]].priority)
+        return picked

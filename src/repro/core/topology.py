@@ -33,6 +33,8 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.admission import (AdmissionController, GroupBudget,
+                                  kv_cache_bytes)
 from repro.core.mobility import LinkTrace
 from repro.core.network import LinkModel, data_rate, offload_latency
 from repro.core.offload import (GroupUnavailableError, NodeGroup,
@@ -282,7 +284,8 @@ class HeteroRuntime:
                  kv_keep_rate: Optional[float] = None,
                  link_traces: Optional[Dict[Union[int, str],
                                             LinkTrace]] = None,
-                 reprobe_after: int = 2, reprobe_max: int = 32):
+                 reprobe_after: int = 2, reprobe_max: int = 32,
+                 group_budgets: Optional[Dict[str, GroupBudget]] = None):
         self.topology = topology
         self.slots = slots
         self.max_len = max_len
@@ -337,6 +340,13 @@ class HeteroRuntime:
         # decode waves are split over every group EXCEPT the dedicated
         # prefill spoke (when one is marked) — that group serves KV blocks
         self._decode = topology.decode_indices()
+        # power/memory/busy-factor admission (PR 10): ALWAYS armed — the
+        # default budgets are cold (wall power, λ memory gate), so the
+        # headroom telemetry is populated whether or not the operator
+        # budgets any group; hot groups mask out of the split below
+        self.admission = AdmissionController(
+            [topology.groups[gi] for gi in self._decode],
+            budgets=group_budgets)
         D = len(self._decode)
         if D >= 2:
             self.controller = controller or SplitRatioController(
@@ -430,6 +440,9 @@ class HeteroRuntime:
                         payload_bytes_per_item=payload, max_new=max_new,
                         prefill_worker=worker, prefix_cache=pcache)
         self.tasks[name] = spec
+        # every decode group hosts one engine of this task: its analytic
+        # cache footprint joins the admission ledger (memory headroom)
+        self.admission.add_task_bytes(kv_cache_bytes(cfg, self.slots, ml))
         return spec
 
     # ------------------------------------------------------------------
@@ -516,7 +529,9 @@ class HeteroRuntime:
     # ------------------------------------------------------------------
     def serve(self, requests: Sequence[ServeRequest], *, split=None,
               wave: Optional[int] = None, warm: bool = True,
-              verbose: bool = False) -> ServeResult:
+              verbose: bool = False,
+              on_tokens: Optional[Callable[[int, int, List[int]],
+                                           None]] = None) -> ServeResult:
         """Drain a (possibly mixed-task) request stream through the
         topology.  Returns outputs per task + structured telemetry.
 
@@ -525,7 +540,14 @@ class HeteroRuntime:
         group only while its priced cost (remote prefill + KV-transfer
         hop) beats local shadow prefill AND the group is healthy — a
         mid-wave failure falls back inside the engines (bit-identical
-        streams) and latches the router to local."""
+        streams) and latches the router to local.
+
+        ``on_tokens(uid, start, tokens)`` (optional) streams host-side
+        token landings live: ``start`` is the stream position of the
+        first token in the chunk, so a re-queued request replayed on a
+        survivor (bit-identical prefix) can be deduplicated by position
+        — the :class:`~repro.serving.frontend.ServingFrontend` is the
+        intended consumer.  Warmup runs never stream."""
         if not self.tasks:
             raise RuntimeError("no tasks registered — call add_task first")
         decode = self._decode
@@ -558,6 +580,8 @@ class HeteroRuntime:
         total_requeued = 0
         total_retries = 0
         total_latched = 0
+        total_rerouted = 0
+        adm_tel: List = []           # last wave's per-group assessment
         retried_uids: set = set()
         dead: Dict[int, Backoff] = {}     # topology group index → re-probe
         group_alive_tel: Dict[str, bool] = {}
@@ -649,7 +673,28 @@ class HeteroRuntime:
                              for a, gi in zip(alive_mask, decode))
             if not any(eff_mask):
                 eff_mask = alive_mask
-            sv, counts = self._split_for(len(chunk), split, eff_mask)
+
+            # 5) power/memory/busy-factor admission (PR 10): groups whose
+            # budget runs hot mask out of the split — the same masked-
+            # simplex path that removes dead groups — and their share
+            # re-routes to the cold survivors.  Like the β latch, hotness
+            # is advisory: an all-hot fleet still decodes (the frontend
+            # sheds in that regime instead)
+            adm = self.admission.assess()
+            adm_mask = tuple(e and not a.hot
+                             for e, a in zip(eff_mask, adm))
+            wave_rerouted = 0
+            if any(adm_mask) and adm_mask != eff_mask:
+                _, counts_base = self._split_for(len(chunk), split,
+                                                 eff_mask)
+                eff_mask = adm_mask
+                sv, counts = self._split_for(len(chunk), split, eff_mask)
+                wave_rerouted = sum(c for c, keep
+                                    in zip(counts_base, eff_mask)
+                                    if not keep)
+            else:
+                sv, counts = self._split_for(len(chunk), split, eff_mask)
+            total_rerouted += wave_rerouted
             counts = list(counts)
 
             route = None
@@ -725,7 +770,8 @@ class HeteroRuntime:
                     for task, reqs_t in by_task.items():
                         spec = self.tasks[task]
                         outs, st = spec.engines[grp.name].run(
-                            self._capped(spec, reqs_t))
+                            self._capped(spec, reqs_t),
+                            on_tokens=on_tokens)
                         staged.append((task, outs, st))
                         payload += len(reqs_t) * spec.payload_bytes_per_item
                     if share:
@@ -791,6 +837,12 @@ class HeteroRuntime:
                     "t_await_s": await_s_group[d],
                     "tasks": {t: len(r) for t, r in by_task.items()}}
             wall = time.perf_counter() - t0
+            # the measured group walls drain the admission controller's
+            # battery clocks (Eq. 5's t_dnn) for the NEXT wave's headroom
+            for d, gi in enumerate(decode):
+                self.admission.charge(self.topology.groups[gi].name,
+                                      t_group[d])
+            adm_tel = adm
             # commit the wave's failures: requests from dead groups go
             # back to the FRONT of the queue (same serve call, next wave)
             requeue_uids = {r.uid for r in requeue}
@@ -865,7 +917,11 @@ class HeteroRuntime:
                 wave_retries=wave_retries,
                 link_bw_hz=tuple(link_bw[self.topology.groups[gi].name]
                                  for gi in decode),
-                mobility_latched=n_latched)
+                mobility_latched=n_latched,
+                admission_hot=tuple(a.hot for a in adm),
+                admission_rerouted=wave_rerouted,
+                power_headroom_w=tuple(a.power_headroom_w for a in adm),
+                mem_headroom_frac=tuple(a.mem_headroom_frac for a in adm))
             if split is None and self.controller is not None:
                 self.controller.observe(rep)
             if self.prefill_router is not None:
@@ -913,6 +969,12 @@ class HeteroRuntime:
                 "wave_retries": wave_retries,
                 "link_bw_hz": dict(link_bw),
                 "mobility_latched": n_latched,
+                "admission_hot": {a.name: a.hot for a in adm},
+                "admission_rerouted": wave_rerouted,
+                "power_headroom_w": {a.name: round(a.power_headroom_w, 6)
+                                     for a in adm},
+                "mem_headroom_frac": {a.name: round(a.mem_headroom_frac, 6)
+                                      for a in adm},
                 "per_group": per_group})
             if verbose:
                 counts_str = "/".join(str(c) for c in counts)
@@ -964,6 +1026,12 @@ class HeteroRuntime:
                 "wave_requeued": total_requeued,
                 "wave_retries": total_retries,
                 "mobility_latched": total_latched,
+                "admission_rerouted": total_rerouted,
+                "admission_hot": {a.name: a.hot for a in adm_tel},
+                "power_headroom_w": {a.name: round(a.power_headroom_w, 6)
+                                     for a in adm_tel},
+                "mem_headroom_frac": {a.name: round(a.mem_headroom_frac, 6)
+                                      for a in adm_tel},
                 "group_alive": group_alive_tel,
                 "link_bw_hz": dict(link_bw),
                 "final_split": [round(float(f), 4) for f in (

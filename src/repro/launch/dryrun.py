@@ -18,6 +18,7 @@ import argparse
 import dataclasses
 import json
 import time
+import traceback
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -179,13 +180,15 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "reason": "long_500k requires sub-quadratic attention "
                           "(DESIGN.md §4)"}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    # monotonic clock, like the serving-path timers: an NTP step during a
+    # minutes-long lower/compile must not yield negative/garbage timings
+    t0 = time.perf_counter()
     lowered, meta = lower_one(cfg, shape, mesh, fsdp=fsdp, remat=remat,
                               microbatches=microbatches)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
     res = {
         "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
         "mesh": dict(mesh.shape), "mode": meta["mode"],
@@ -200,7 +203,8 @@ def run_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
             res["layer_costs"] = layer_costs(variant_config(cfg, shape),
                                              shape, mesh)
         except Exception as e:
-            res["layer_costs"] = {"error": f"{type(e).__name__}: {e}"}
+            res["layer_costs"] = {"error": f"{type(e).__name__}: {e}",
+                                  "traceback": traceback.format_exc()}
     if verbose:
         mem_gb = (res["temp_size_in_bytes"] or 0) / 1024**3
         arg_gb = (res["argument_size_in_bytes"] or 0) / 1024**3
@@ -243,9 +247,11 @@ def main():
             res = run_dryrun(arch, shape, multi_pod=mp,
                              fsdp=not args.no_fsdp, remat=not args.no_remat,
                              with_layer_costs=args.layer_costs)
-        except Exception as e:  # record failures, keep sweeping
+        except Exception as e:  # record failures, keep sweeping — with the
+            # full traceback, so the JSON artifact alone can diagnose them
             res = {"arch": arch, "shape": shape, "multi_pod": mp,
-                   "skipped": False, "error": f"{type(e).__name__}: {e}"}
+                   "skipped": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
             print(f"[dryrun] {arch} × {shape} FAILED: {res['error']}")
         results.append(res)
         if args.out:

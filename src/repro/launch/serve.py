@@ -29,7 +29,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -39,6 +39,26 @@ from repro.configs.base import get_config, list_configs, reduced
 from repro.data.pipeline import request_stream
 from repro.models import model as M
 from repro.serving.engine import ServeRequest, ServingEngine
+
+
+def parse_tenants(spec: str) -> Dict[str, C.TenantClass]:
+    """``--tenants`` parser: a comma list of
+    ``name[:priority[:weight[:deadline_s]]]`` classes, e.g. the default
+    ``interactive:0:2:0.5,batch:1:1`` — priority 0 preempts the
+    admission queue (tightest TTFT deadline class), weight sets the
+    weighted-deficit fair share, deadline_s the class's TTFT target."""
+    tenants: Dict[str, C.TenantClass] = {}
+    for part in spec.split(","):
+        bits = [b.strip() for b in part.strip().split(":")]
+        if not bits[0]:
+            raise argparse.ArgumentTypeError(
+                f"--tenants entry {part!r} has no name")
+        tenants[bits[0]] = C.TenantClass(
+            bits[0],
+            priority=int(bits[1]) if len(bits) > 1 else 1,
+            weight=float(bits[2]) if len(bits) > 2 else 1.0,
+            deadline_s=float(bits[3]) if len(bits) > 3 else float("inf"))
+    return tenants
 
 
 def parse_split(value: str) -> Tuple[str, Optional[float]]:
@@ -114,8 +134,14 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                      prefix_block_size: int = 8, prefill_pool: int = 1,
                      kv_keep_rate: Optional[float] = None,
                      link_trace: Optional[str] = None,
-                     mobility_beta: Optional[float] = None
-                     ) -> C.ServeResult:
+                     mobility_beta: Optional[float] = None,
+                     frontend: bool = False,
+                     tenants: Optional[Dict[str, C.TenantClass]] = None,
+                     queue_depth: int = 64,
+                     shed_depth: Optional[int] = None,
+                     power_budget_wh: Optional[float] = None,
+                     power_threshold_w: float = 8.0
+                     ) -> Optional[C.ServeResult]:
     """Continuous-batching collaborative serving over a request stream,
     through the HeteroRuntime session (pair or star topology).
 
@@ -137,6 +163,14 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
         # function of the wave index, so sharing the object is safe
         tr = C.LinkTrace.from_spec(link_trace, beta=mobility_beta)
         traces = {gi: tr for gi in range(1, len(topology))}
+    budgets = None
+    if power_budget_wh is not None:
+        # one battery-style power envelope per decode group: the serving
+        # wall drains it (Eqs. 5-6) and hot groups mask out of the split
+        budgets = {topology.groups[gi].name: C.GroupBudget(
+                       battery=C.BatteryState(capacity_wh=power_budget_wh),
+                       power_threshold_w=power_threshold_w)
+                   for gi in topology.decode_indices()}
     runtime = C.HeteroRuntime(topology, slots=slots, max_len=max_len,
                               macro_steps=macro_steps,
                               wave_steps=wave_steps,
@@ -145,7 +179,8 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                               prefix_block_size=prefix_block_size,
                               prefill_pool=prefill_pool,
                               kv_keep_rate=kv_keep_rate,
-                              link_traces=traces)
+                              link_traces=traces,
+                              group_budgets=budgets)
     runtime.add_task(cfg.name, cfg, params,
                      max_new=max_new,
                      payload_bytes_per_item=prompt_len * cfg.d_model * 2)
@@ -159,6 +194,55 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
                     max_new=max(1, min(r.max_new_tokens, max_new)),
                     frontend=r.frontend, task=cfg.name)
                 for r in reqs]
+    if frontend:
+        # asyncio ingress in front of the same runtime: tenant-fair
+        # admission waves, streamed tokens, power/memory shedding
+        import asyncio
+
+        from repro.serving.frontend import FrontendError, ServingFrontend
+        tenants = tenants or parse_tenants("interactive:0:2:0.5,batch:1:1")
+        fe = ServingFrontend(runtime, tenants, queue_depth=queue_depth,
+                             shed_depth=shed_depth,
+                             split=None if mode == "auto" else fixed_r)
+        runtime.warmup(requests[:2])
+        tnames = sorted(tenants)
+
+        async def drive() -> int:
+            await fe.start()
+            streams, refused = [], 0
+            for i, req in enumerate(requests):
+                try:
+                    streams.append(await fe.submit(
+                        req.prompt, req.max_new,
+                        tenant=tnames[i % len(tnames)], task=cfg.name,
+                        frontend=req.frontend))
+                except FrontendError:
+                    refused += 1   # typed backpressure/shed refusal
+            for s in streams:
+                await s.collect()
+            await fe.stop()
+            return refused
+
+        refused = asyncio.run(drive())
+        tel = fe.telemetry()
+        print(f"frontend[{topology.kind}]: {tel['waves_served']} waves, "
+              f"{refused} refused (queue/shed), "
+              f"queue_depth={tel['queue_depth']} "
+              f"shed_depth={tel['shed_depth']}")
+        for name, ts in tel["tenants"].items():
+            print(f"  tenant {name}: {ts['completed']}/{ts['submitted']} "
+                  f"done, shed={ts['shed']} "
+                  f"ttft p50/p99={ts['ttft_p50_s'] * 1e3:.1f}/"
+                  f"{ts['ttft_p99_s'] * 1e3:.1f}ms "
+                  f"itl p50/p99={ts['itl_p50_s'] * 1e3:.2f}/"
+                  f"{ts['itl_p99_s'] * 1e3:.2f}ms")
+        if telemetry_path:
+            import json as _json
+            with open(telemetry_path, "w") as fh:
+                _json.dump({"frontend": tel}, fh, indent=2)
+            print(f"telemetry -> {telemetry_path}")
+        return None
+
     result = runtime.serve(requests, wave=2 * slots * (len(topology) - 1),
                            split=None if mode == "auto" else fixed_r,
                            verbose=True)
@@ -181,6 +265,10 @@ def serve_continuous(cfg, params, reqs, *, prompt_len: int, max_new: int,
               f"{tot['wave_retries']} retried, "
               f"{tot['mobility_latched']} mobility latches, "
               f"alive={tot['group_alive']}")
+    if tot.get("admission_rerouted"):
+        print(f"admission: {tot['admission_rerouted']} re-routed off "
+              f"budget-hot groups, hot={tot['admission_hot']}, "
+              f"power headroom={tot['power_headroom_w']}")
     if prefix_cache_blocks > 0:
         print(f"prefix cache[{prefix_cache_blocks}x{prefix_block_size}]: "
               f"{tot['prefix_hits']} hits, "
@@ -260,6 +348,31 @@ def main():
                          "stop-offloading latch (default: MobilityModel's)")
     ap.add_argument("--telemetry-json", default=None, metavar="PATH",
                     help="write HeteroRuntime telemetry JSON here")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve through the asyncio multi-tenant ingress "
+                         "(streamed tokens, tenant-fair admission waves, "
+                         "power/memory shedding; requires --continuous)")
+    ap.add_argument("--tenants", default="interactive:0:2:0.5,batch:1:1",
+                    metavar="SPEC",
+                    help="comma list of name[:priority[:weight"
+                         "[:deadline_s]]] tenant classes; requests round-"
+                         "robin across them (frontend mode)")
+    ap.add_argument("--queue-depth", type=int, default=64, metavar="N",
+                    help="bounded admission queue: submissions beyond N "
+                         "queued requests are refused (backpressure)")
+    ap.add_argument("--shed-depth", type=int, default=None, metavar="N",
+                    help="queued requests admitted while the WHOLE "
+                         "fleet's power/memory budget is hot before the "
+                         "ingress sheds (default: --slots)")
+    ap.add_argument("--power-budget-wh", type=float, default=None,
+                    metavar="WH",
+                    help="arm a battery-style power envelope of WH "
+                         "watt-hours on every decode group (Eqs. 5-6): "
+                         "serving drains it, hot groups re-route via the "
+                         "masked split (continuous mode)")
+    ap.add_argument("--power-threshold-w", type=float, default=8.0,
+                    metavar="W",
+                    help="P_available floor (W) under the power envelope")
     args = ap.parse_args()
     nodes = args.nodes or (2 if args.topology == "pair" else 3)
 
@@ -291,6 +404,12 @@ def main():
     if args.wave_steps > 1 and not args.continuous:
         ap.error("--wave-steps > 1 requires --continuous (the wave driver "
                  "is the slot runtime's fused decode launcher)")
+    if args.frontend and not args.continuous:
+        ap.error("--frontend requires --continuous (the ingress feeds the "
+                 "slot runtime at wave boundaries)")
+    if args.power_budget_wh is not None and not args.continuous:
+        ap.error("--power-budget-wh requires --continuous (the envelope "
+                 "drains on the HeteroRuntime wave clock)")
     topology = build_topology(args.topology, nodes,
                               prefill_group=args.prefill_group)
     P = args.prompt_len
@@ -311,7 +430,13 @@ def main():
                          prefill_pool=args.prefill_pool,
                          kv_keep_rate=args.kv_keep_rate,
                          link_trace=args.link_trace,
-                         mobility_beta=args.mobility_beta)
+                         mobility_beta=args.mobility_beta,
+                         frontend=args.frontend,
+                         tenants=parse_tenants(args.tenants),
+                         queue_depth=args.queue_depth,
+                         shed_depth=args.shed_depth,
+                         power_budget_wh=args.power_budget_wh,
+                         power_threshold_w=args.power_threshold_w)
         return
 
     prompts = np.stack([np.pad(r.prompt[:P], (0, max(0, P - len(r.prompt))))

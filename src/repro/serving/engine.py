@@ -51,7 +51,8 @@ import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, List, Optional, Sequence,
+                    Tuple, Union)
 
 import jax
 import jax.numpy as jnp
@@ -763,6 +764,10 @@ class ContinuousServingEngine:
             self._loops: Dict[Tuple[int, Optional[int]], Any] = {}
             self._waves: Dict[Tuple[int, int, Optional[int]], Any] = {}
         self._offset = cfg.frontend_tokens if cfg.family == "vlm" else 0
+        # live token-streaming hook for the CURRENT run (set per run():
+        # the ingress frontend listens; None = batch mode, no streaming)
+        self._on_tokens: Optional[Callable[[int, int, List[int]],
+                                           None]] = None
         # the launcher thread re-enters the engine's mesh (thread-local in
         # jax); capture it at construction, like the programs' tracings
         from repro.models.sharding import active_mesh
@@ -818,6 +823,15 @@ class ContinuousServingEngine:
         return logits, cache
 
     # ------------------------------------------------------------------
+    def _emit_tokens(self, uid: int, start: int, toks) -> None:
+        """Stream host-landed tokens to the run's ``on_tokens`` hook as
+        ``(uid, absolute position of toks[0], tokens)``.  Positions make
+        replays (a re-queued request re-served on a survivor) safe to
+        deduplicate downstream — streams are bit-identical, so the same
+        position always carries the same token."""
+        if self._on_tokens is not None and len(toks):
+            self._on_tokens(uid, start, [int(t) for t in toks])
+
     def _consume_block(self, block, slot_states, K: int,
                        step_no: int) -> Tuple[int, float]:
         """Host bookkeeping for one fetched ``[K, slots]`` token block,
@@ -838,6 +852,7 @@ class ContinuousServingEngine:
                 if hits.size:
                     col = col[:hits[0] + 1]
             s.tokens.extend(int(x) for x in col)
+            self._emit_tokens(s.uid, len(s.tokens) - len(col), col)
             s.remaining -= len(col)
             consumed[i] = len(col)
             if s.remaining <= 0 or (eos is not None
@@ -924,12 +939,16 @@ class ContinuousServingEngine:
                 slot_states[slot] = _Slot(
                     uid=req.uid, remaining=req.max_new - 1,
                     tokens=[int(first)], admitted_step=step_no)
+                self._emit_tokens(req.uid, 0, [int(first)])
         return cache, cur_tok, lengths, remaining, done, syncs, t_write
 
     # ------------------------------------------------------------------
-    def run(self, requests: Sequence[ServeRequest]
+    def run(self, requests: Sequence[ServeRequest],
+            on_tokens: Optional[Callable[[int, int, List[int]],
+                                         None]] = None
             ) -> Tuple[List[RequestOutput], ContinuousStats]:
         cfg = self.cfg
+        self._on_tokens = on_tokens
         if not requests:
             return [], ContinuousStats(0, 0, 0, 0.0, 0.0, 0.0, 0.0)
         P = len(requests[0].prompt)
@@ -1028,6 +1047,8 @@ class ContinuousServingEngine:
                 for i, s in enumerate(slot_states):
                     if s.busy:
                         s.tokens.append(int(new_tok[i]))
+                        self._emit_tokens(s.uid, len(s.tokens) - 1,
+                                          [s.tokens[-1]])
                         s.remaining -= 1
                 continue
 
@@ -1398,6 +1419,7 @@ class ContinuousServingEngine:
                 host_syncs += 1                  # loop: instant by now
                 for (slot, req, _), first in zip(newly, firsts):
                     slot_states[slot].tokens.append(int(first))
+                    self._emit_tokens(req.uid, 0, [int(first)])
             if single_dev is not None:
                 host_syncs += 1
                 for sh, first in zip(singles, np.asarray(single_dev)):
@@ -1406,6 +1428,7 @@ class ContinuousServingEngine:
                         tokens=np.asarray([int(first)], np.int32),
                         admitted_step=boundary_step,
                         finished_step=boundary_step))
+                    self._emit_tokens(sh.req.uid, 0, [int(first)])
             t_await += time.perf_counter() - t0a
 
             if block is not None:

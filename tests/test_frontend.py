@@ -1,0 +1,357 @@
+"""Async multi-tenant ingress (PR 10): streaming, fairness, chaos.
+
+The ServingFrontend is the service face of HeteroRuntime.serve: an
+asyncio ingress with per-tenant deadline/priority classes, token-level
+streaming, bounded-queue backpressure and power/memory-aware shedding.
+This file pins its contracts:
+
+* streams for >= 2 tenant classes are BIT-IDENTICAL to the
+  ``macro_steps=0`` per-step reference (the ingress moves scheduling,
+  never tokens), with TTFT/ITL stamped per request;
+* backpressure and shedding are TYPED refusals raised BEFORE any work
+  queues — a refused request never owns a stream, never sees a token;
+* tenant fairness is starvation-free under adversarial arrivals
+  (derandomized hypothesis over the pure TenantScheduler);
+* chaos: killing or wedging a decode group with streams OPEN either
+  completes every accepted request bit-identically on the survivors
+  (replays deduplicated by stream position) or — when the whole fleet
+  is dead — fails it with a typed RequestAbortedError and zero tokens
+  streamed;
+* wave-clock accounting: frontend-admitted requests fold each serve
+  wave's totals in exactly once — the group-kill regression pins the
+  exact wave_requeued/wave_retries/admission_stalls values.
+
+The scheduler property tests are fast tier; everything that builds an
+engine or arms a fault is ``slow`` (the CI chaos job), like
+tests/test_group_faults.py.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax
+
+import repro.core as C
+from _hypothesis_compat import given, settings, strategies as st
+from repro.configs.base import get_config, reduced
+from repro.models import model as M
+from repro.serving.engine import ContinuousServingEngine, ServeRequest
+from repro.serving.frontend import (QueueFullError, RequestAbortedError,
+                                    RequestShedError, ServingFrontend)
+
+SLOTS = 2
+MAX_LEN = 48
+PROMPT = 8
+MACRO_K = 4
+MAX_NEWS = [1, 6, 3, 1, 7, 4, 2, 5]   # churny: singles + mixed lengths
+
+TENANTS = {
+    "interactive": C.TenantClass("interactive", priority=0, weight=2.0,
+                                 deadline_s=0.5),
+    "batch": C.TenantClass("batch", priority=1, weight=1.0),
+}
+
+
+@pytest.fixture(scope="module")
+def small_llama():
+    cfg = reduced(get_config("llama3.2-1b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def prompts(small_llama):
+    cfg, _ = small_llama
+    rng = np.random.default_rng(0)
+    return rng.integers(0, cfg.vocab_size,
+                        (len(MAX_NEWS), PROMPT)).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def ref_streams(small_llama, prompts):
+    """macro_steps=0 per-step reference, keyed by SUBMISSION INDEX."""
+    cfg, params = small_llama
+    eng = ContinuousServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                                  macro_steps=0)
+    reqs = [ServeRequest(uid=i, prompt=prompts[i], max_new=MAX_NEWS[i])
+            for i in range(len(MAX_NEWS))]
+    outs, _ = eng.run(reqs)
+    return {o.uid: np.asarray(o.tokens, np.int32) for o in outs}
+
+
+def _pair(cfg, params, aux_profile=None, budgets=None):
+    dev = jax.devices()[0]
+    topo = C.Topology.pair(
+        C.NodeGroup("pri", [dev], C.JETSON_NANO),
+        C.NodeGroup("aux", [dev], aux_profile or C.JETSON_XAVIER),
+        C.ICI_LINK)
+    rt = C.HeteroRuntime(topo, slots=SLOTS, max_len=MAX_LEN,
+                         macro_steps=MACRO_K, group_budgets=budgets)
+    rt.add_task(cfg.name, cfg, params)
+    rt.warmup([ServeRequest(uid=0, prompt=np.zeros(PROMPT, np.int32),
+                            max_new=2, task=cfg.name)])
+    return topo, rt
+
+
+def _drive(rt, cfg, prompts, *, queue_depth=64, shed_depth=None,
+           wave_requests=None, n=len(MAX_NEWS)):
+    """Submit n requests round-robin across TENANTS (all before the
+    serve loop runs — submit never yields), then collect every stream.
+    Returns (streams, outs, errs, idx_of, telemetry, refused)."""
+    async def go():
+        fe = ServingFrontend(rt, TENANTS, split=0.5,
+                             queue_depth=queue_depth, shed_depth=shed_depth,
+                             wave_requests=wave_requests)
+        await fe.start()
+        streams, idx_of, refused = {}, {}, []
+        names = sorted(TENANTS)
+        for i in range(n):
+            try:
+                s = await fe.submit(prompts[i], MAX_NEWS[i],
+                                    tenant=names[i % len(names)],
+                                    task=cfg.name)
+                streams[s.uid] = s
+                idx_of[s.uid] = i
+            except (QueueFullError, RequestShedError) as e:
+                refused.append(e)
+        outs, errs = {}, {}
+        for uid, s in streams.items():
+            try:
+                outs[uid] = await s.collect()
+            except RequestAbortedError as e:
+                errs[uid] = e
+        tel = fe.telemetry()
+        await fe.stop()
+        return streams, outs, errs, idx_of, tel, refused
+    return asyncio.run(go())
+
+
+# ---------------------------------------------------------------------------
+# tenant fairness: pure TenantScheduler properties (fast tier)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30)
+@given(weights=st.lists(st.integers(1, 8), min_size=2, max_size=4),
+       counts=st.lists(st.integers(0, 12), min_size=2, max_size=4),
+       batch=st.integers(1, 5))
+def test_tenant_drr_conserves_and_progresses(weights, counts, batch):
+    """Any arrival pattern drains exactly once, FIFO within a tenant,
+    every select makes progress, and each wave dispatches urgent
+    deadline classes first."""
+    k = min(len(weights), len(counts))
+    tenants = {f"t{i}": C.TenantClass(f"t{i}", priority=i % 2,
+                                      weight=weights[i] / 2.0)
+               for i in range(k)}
+    sched = C.TenantScheduler(tenants)
+    for i in range(k):
+        for j in range(counts[i]):
+            sched.enqueue(f"t{i}", (i, j))
+    total = sum(counts[:k])
+    served = {t: [] for t in tenants}
+    waves = 0
+    while sched.backlog():
+        before = sched.backlog()
+        picked = sched.select(batch)
+        assert len(picked) == min(batch, before)          # progress
+        pris = [tenants[t].priority for t, _ in picked]
+        assert pris == sorted(pris)          # deadline-class preemption
+        for t, item in picked:
+            served[t].append(item)
+        waves += 1
+        assert waves <= total + 1, "select loop failed to drain"
+    for i in range(k):                # conservation + per-tenant FIFO
+        assert served[f"t{i}"] == [(i, j) for j in range(counts[i])]
+
+
+@settings(max_examples=25)
+@given(w_hog=st.integers(1, 16), n_waves=st.integers(8, 48))
+def test_tenant_drr_no_starvation_under_hog(w_hog, n_waves):
+    """Adversarial arrivals: a high-weight urgent hog floods every wave
+    while a light background tenant trickles.  The victim's deficit
+    clock must keep ticking — it earns weight/round, so it is served at
+    least every ceil(1/weight) waves once backlogged (the starvation
+    bug this pins: a wave-filling tenant must not stop the rotation or
+    the others' credit)."""
+    tenants = {"hog": C.TenantClass("hog", priority=0, weight=float(w_hog)),
+               "victim": C.TenantClass("victim", priority=1, weight=0.25)}
+    sched = C.TenantScheduler(tenants)
+    served = {"hog": 0, "victim": 0}
+    for r in range(n_waves):
+        for _ in range(4):
+            sched.enqueue("hog", ("hog", r))
+        sched.enqueue("victim", ("victim", r))
+        for t, _ in sched.select(2):
+            served[t] += 1
+    # 0.25 credit per wave -> one service per 4 waves, minus ramp-up
+    assert served["victim"] >= n_waves // 4 - 2, served
+    assert served["hog"] > served["victim"]   # weights still dominate
+
+
+# ---------------------------------------------------------------------------
+# ingress end-to-end + chaos (slow tier: builds engines, arms faults)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_two_tenant_streams_bit_identical(small_llama, prompts, ref_streams):
+    cfg, params = small_llama
+    _, rt = _pair(cfg, params)
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts)
+    assert not refused and not errs
+    assert len(outs) == len(MAX_NEWS)
+    for uid, toks in outs.items():
+        np.testing.assert_array_equal(toks, ref_streams[idx_of[uid]])
+    for uid, s in streams.items():
+        assert s.tokens == list(outs[uid])          # stream == collect
+        assert s.ttft_s > 0.0
+        assert len(s.itl_s) == MAX_NEWS[idx_of[uid]] - 1
+    for name, t in tel["tenants"].items():
+        assert t["accepted"] == len(MAX_NEWS) // 2
+        assert t["completed"] == t["accepted"], f"{name} starved: {t}"
+        assert t["shed"] == 0 and t["refused_queue"] == 0
+        assert t["ttft_p99_s"] > 0.0
+    # cold fleet: the power/memory path must not fire
+    assert tel["runtime"]["admission_rerouted"] == 0
+    assert tel["runtime"]["tokens"] == sum(MAX_NEWS)
+
+
+@pytest.mark.slow
+def test_backpressure_refuses_typed_before_queueing(small_llama, prompts,
+                                                    ref_streams):
+    cfg, params = small_llama
+    _, rt = _pair(cfg, params)
+    # all 8 submits land before the serve loop runs (submit never
+    # yields), so depth-2 refuses exactly 6 — deterministically
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts,
+                                                       queue_depth=2)
+    assert len(refused) == len(MAX_NEWS) - 2 and not errs
+    assert all(isinstance(e, QueueFullError) for e in refused)
+    assert sum(t["refused_queue"] for t in tel["tenants"].values()) \
+        == len(refused)
+    assert len(outs) == 2              # accepted requests still complete
+    for uid, toks in outs.items():
+        np.testing.assert_array_equal(toks, ref_streams[idx_of[uid]])
+
+
+@pytest.mark.slow
+def test_fleet_hot_sheds_typed(small_llama, prompts, ref_streams):
+    """Every group's battery is drained -> fleet_hot(): the ingress
+    sheds beyond shed_depth instead of admitting blindly.  Refused
+    requests never own a stream; accepted ones still complete."""
+    cfg, params = small_llama
+    drained = {g: C.GroupBudget(battery=C.BatteryState(capacity_wh=0.0))
+               for g in ("pri", "aux")}
+    _, rt = _pair(cfg, params, budgets=drained)
+    assert rt.admission.fleet_hot()
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts,
+                                                       shed_depth=1)
+    assert len(refused) == len(MAX_NEWS) - 1 and not errs
+    assert all(isinstance(e, RequestShedError) for e in refused)
+    assert len(streams) == 1           # refusals precede stream creation
+    assert sum(t["shed"] for t in tel["tenants"].values()) == len(refused)
+    for t in tel["tenants"].values():
+        assert t["completed"] == t["accepted"]
+    for uid, toks in outs.items():
+        np.testing.assert_array_equal(toks, ref_streams[idx_of[uid]])
+
+
+@pytest.mark.slow
+def test_busy_hot_group_reroutes_bit_identical(small_llama, prompts,
+                                               ref_streams):
+    """One busy-hot group: admission re-routes its share through the
+    masked split (nonzero counter), tokens unmoved."""
+    import dataclasses
+    cfg, params = small_llama
+    hot_aux = dataclasses.replace(C.JETSON_XAVIER, busy_factor=0.95)
+    _, rt = _pair(cfg, params, aux_profile=hot_aux)
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts)
+    assert not refused and not errs and len(outs) == len(MAX_NEWS)
+    assert tel["runtime"]["admission_rerouted"] > 0
+    for uid, toks in outs.items():
+        np.testing.assert_array_equal(toks, ref_streams[idx_of[uid]])
+
+
+def _star(cfg, params, budgets=None):
+    dev = jax.devices()[0]
+    topo = C.Topology.star(
+        C.NodeGroup("pri", [dev], C.JETSON_NANO),
+        [C.NodeGroup("aux0", [dev], C.JETSON_XAVIER),
+         C.NodeGroup("aux1", [dev], C.JETSON_XAVIER)],
+        C.ICI_LINK)
+    rt = C.HeteroRuntime(topo, slots=SLOTS, max_len=MAX_LEN,
+                         macro_steps=MACRO_K, group_budgets=budgets)
+    rt.add_task(cfg.name, cfg, params)
+    rt.warmup([ServeRequest(uid=0, prompt=np.zeros(PROMPT, np.int32),
+                            max_new=2, task=cfg.name)])
+    return topo, rt
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("timeout", [False, True],
+                         ids=["killed", "wedged"])
+def test_group_dies_with_streams_open(small_llama, prompts, ref_streams,
+                                      timeout):
+    """Kill (or wedge) a decode spoke between frontend waves: streams
+    opened in the first wave already hold tokens; the second wave's
+    victims re-queue onto survivors and every stream still collects
+    bit-identically (replays deduplicated by stream position)."""
+    cfg, params = small_llama
+    topo, rt = _star(cfg, params)
+    # the spoke survives the first frontend wave (one dispatch check),
+    # then dies mid-serve on the second
+    topo.groups[1].inject_fault("dispatch", after=1, timeout=timeout)
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts,
+                                                       wave_requests=4)
+    assert not refused and not errs
+    assert len(outs) == len(MAX_NEWS)
+    for uid, toks in outs.items():
+        np.testing.assert_array_equal(toks, ref_streams[idx_of[uid]])
+        assert len(toks) == MAX_NEWS[idx_of[uid]]   # no duplicated tail
+    assert not topo.groups[1].alive
+    assert tel["runtime"]["wave_requeued"] >= 1
+    assert tel["runtime"]["wave_retries"] >= 1
+
+
+@pytest.mark.slow
+def test_fleet_dead_aborts_typed_before_tokens(small_llama, prompts):
+    """Every decode group dead: accepted requests fail with a typed
+    RequestAbortedError and ZERO tokens streamed — never a hang, never
+    a partial untyped stream."""
+    cfg, params = small_llama
+    topo, rt = _pair(cfg, params)
+    for g in topo.groups:
+        g.kill()
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts,
+                                                       n=4)
+    assert not refused and not outs
+    assert len(errs) == 4
+    assert all(isinstance(e, RequestAbortedError) for e in errs.values())
+    for s in streams.values():
+        assert s.tokens == []          # typed failure BEFORE any token
+    assert sum(t["aborted"] for t in tel["tenants"].values()) == 4
+
+
+@pytest.mark.slow
+def test_wave_accounting_frontend_group_kill(small_llama, prompts,
+                                             ref_streams):
+    """Satellite regression: frontend-admitted requests must not
+    double-count in the wave clock.  Two frontend waves of 4 on the
+    star, the aux0 spoke killed between them — the counters below are
+    EXACT: one kill event (not one per admitted request), its one-slice
+    re-queue retried once, zero admission stalls, tokens counted once."""
+    cfg, params = small_llama
+    topo, rt = _star(cfg, params)
+    topo.groups[1].inject_fault("dispatch", after=1)
+    streams, outs, errs, idx_of, tel, refused = _drive(rt, cfg, prompts,
+                                                       wave_requests=4)
+    assert not refused and not errs and len(outs) == len(MAX_NEWS)
+    for uid, toks in outs.items():
+        np.testing.assert_array_equal(toks, ref_streams[idx_of[uid]])
+    assert tel["waves_served"] == 2
+    assert tel["runtime"] == {
+        "wave_requeued": 1,            # ONE failure event, counted once
+        "wave_retries": 1,             # the dead spoke's slice, re-run
+        "admission_stalls": 0,
+        "admission_rerouted": 0,
+        "tokens": sum(MAX_NEWS),       # every token exactly once
+    }

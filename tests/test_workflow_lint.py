@@ -111,9 +111,9 @@ def test_bench_matrix_covers_every_gate():
     entries = bench["strategy"]["matrix"]["include"]
     gates = {e["gate"] for e in entries}
     assert gates == {"fused-decode", "overlap", "prefill", "prefix",
-                     "faults"}, gates
+                     "faults", "slo"}, gates
     by_gate = {e["gate"]: e["args"] for e in entries}
-    for gate in ("overlap", "prefill", "prefix", "faults"):
+    for gate in ("overlap", "prefill", "prefix", "faults", "slo"):
         assert by_gate[gate] == f"--only {gate}", by_gate[gate]
     assert "--json" in by_gate["fused-decode"]
 
